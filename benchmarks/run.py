@@ -1,0 +1,284 @@
+"""Benchmark harness -- one benchmark per paper table/listing.
+
+The paper's empirical artifacts are its four listings (section 4) and the
+API-parity table (Figure 1); this harness times each listing on both
+execution modes, quantifies the phase-1 (master relay) vs phase-2 (ring)
+vs native byte/step costs that section 3.1 describes qualitatively, and
+bridges to the roofline artifacts produced by the dry-run.
+
+Output: ``name,us_per_call,derived`` CSV on stdout.
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import glob
+import os
+import statistics
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def bench(name: str, fn, *, repeat: int = 5, derived: str = ""):
+    fn()                                   # warmup
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ROWS.append((name, statistics.median(ts), derived))
+
+
+# ---------------------------------------------------------------------------
+# Listings 1/2/4 on the LocalComm runtime (paper local mode)
+# ---------------------------------------------------------------------------
+
+def bench_listing1_matvec():
+    from repro.core import parallelize_func
+    mat = np.arange(1, 65, dtype=np.int64).reshape(8, 8)
+    vec = np.arange(8)
+
+    def run():
+        out = parallelize_func(
+            lambda w: int(mat[w.get_rank()] @ vec)
+            if w.get_rank() < 8 else 0).execute(8)
+        assert sum(out) == int(mat @ vec @ np.ones(8))
+    bench("listing1_matvec_local_n8", run)
+
+
+def bench_listing2_ring(n=16):
+    from repro.core import parallelize_func
+
+    def ring(world):
+        rank, size = world.get_rank(), world.get_size()
+        if rank == 0:
+            world.send(1, 0, 42)
+            return world.receive(size - 1, 0)
+        t = world.receive(rank - 1, 0)
+        world.send((rank + 1) % size, 0, t)
+        return t
+
+    def run():
+        assert parallelize_func(ring).execute(n)[0] == 42
+    bench(f"listing2_ring_local_n{n}", run,
+          derived=f"{n} hops/round")
+
+
+def bench_listing4_2d_matvec():
+    from repro.core import parallelize_func
+    n = 3
+    mat = np.arange(1, 10, dtype=np.int64).reshape(3, 3)
+    vec = np.array([1, 2, 3])
+
+    def matvec2d(world):
+        wr = world.get_rank()
+        row = world.split(wr // n, wr)
+        col = world.split(wr % n, wr)
+        x = col.broadcast(0, int(vec[wr % n]) if wr // n == 0 else None)
+        return row.allreduce(int(mat[wr // n, wr % n]) * x,
+                             lambda a, b: a + b)
+
+    def run():
+        out = parallelize_func(matvec2d).execute(9)
+        assert out[0] == int(mat[0] @ vec)
+    bench("listing4_2d_matvec_local_n9", run)
+
+
+def bench_figure1_api_parity():
+    """Figure 1: every MPIgnite method exists with the documented
+    signature on both communicator implementations."""
+    from repro.core import LocalComm, PeerComm, parallelize_func
+    methods = ["send", "receive", "receive_async", "get_rank", "get_size",
+               "split", "broadcast", "allreduce",
+               "reduce", "gather", "scan"]   # paper section-6 extensions
+    missing = [m for m in methods if not hasattr(LocalComm, m)]
+    peer = ["p2p", "shift", "rank", "size", "split", "broadcast",
+            "allreduce", "allgather", "reducescatter", "alltoall",
+            "reduce", "gather", "scan"]
+    missing += [m for m in peer if not hasattr(PeerComm, m)]
+    assert not missing, missing
+    ROWS.append(("figure1_api_parity", 0.0,
+                 f"{len(methods)}+{len(peer)} methods present"))
+
+
+# ---------------------------------------------------------------------------
+# Phase-1 vs phase-2 vs native: analytic wire bytes (section 3.1) and
+# measured SPMD step costs (subprocess with 8 forced host devices).
+# ---------------------------------------------------------------------------
+
+def bench_backend_byte_model():
+    from repro.core import groups as G
+    S = 64 * 2 ** 20   # 64 MiB payload
+    for p in (16, 256):
+        lin = G.collective_cost("allreduce", "linear", S, p)
+        ring = G.collective_cost("allreduce", "ring", S, p)
+        ROWS.append((f"allreduce_bytes_linear_p{p}", 0.0,
+                     f"{lin.bytes_per_device/2**20:.0f}MiB/dev "
+                     f"{lin.steps}steps"))
+        ROWS.append((f"allreduce_bytes_ring_p{p}", 0.0,
+                     f"{ring.bytes_per_device/2**20:.0f}MiB/dev "
+                     f"{ring.steps}steps "
+                     f"({lin.bytes_per_device/ring.bytes_per_device:.1f}x "
+                     "less than phase-1)"))
+
+
+def bench_spmd_backends_subprocess(quick: bool):
+    """Wall-time of one 4 MiB allreduce on an 8-way SPMD mesh per backend
+    (separate process: needs forced host devices)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time, jax, jax.numpy as jnp
+from repro.core import parallelize_func
+for backend in ["native", "ring", "linear"]:
+    def f(world):
+        return world.allreduce(
+            jnp.ones((512, 1024), jnp.float32) * world.rank(), "add")
+    c = parallelize_func(f, backend=backend)
+    c.execute(8, mode="spmd")  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(5):
+        c.execute(8, mode="spmd")
+    print(f"{backend},{(time.perf_counter()-t0)/5*1e6:.0f}")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env)
+    if r.returncode != 0:
+        ROWS.append(("spmd_allreduce_backends", -1.0,
+                     "FAILED: " + r.stderr.strip()[-200:]))
+        return
+    for line in r.stdout.strip().splitlines():
+        backend, us = line.split(",")
+        ROWS.append((f"spmd_allreduce_4MiB_8dev_{backend}", float(us),
+                     "wall time incl dispatch"))
+
+
+# ---------------------------------------------------------------------------
+# Model step micro-benchmarks (reduced configs, 1 device)
+# ---------------------------------------------------------------------------
+
+def bench_model_steps(quick: bool):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS, get_config
+    from repro.models.model import Model
+    from repro.parallel import axes as A
+    from repro.parallel.ops import ParallelConfig, make_ops
+
+    axes = A.MeshAxes(1, 1, 1)
+    pcfg = ParallelConfig(sequence_parallel=False, remat="none")
+    ops = make_ops(axes, pcfg)
+    archs = ARCHS[:3] if quick else ARCHS
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        model = Model(cfg, axes, pcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        B, S = 2, 32
+        if cfg.input_mode == "frames":
+            batch = {"frames": jax.random.normal(key, (B, S, cfg.d_model),
+                                                 jnp.bfloat16),
+                     "labels": jax.random.randint(key, (B, S), 0,
+                                                  cfg.vocab)}
+        else:
+            batch = {"tokens": jax.random.randint(key, (B, S), 0,
+                                                  cfg.vocab)}
+        if cfg.cross_attn_every:
+            batch["image_emb"] = jax.random.normal(
+                key, (B, cfg.n_image_tokens, cfg.vision_d), jnp.bfloat16)
+
+        fn = jax.jit(jax.grad(lambda p: model.loss(ops, p, batch)[0]))
+
+        def run():
+            jax.block_until_ready(fn(params))
+        bench(f"grad_step_smoke_{arch}", run, repeat=3,
+              derived=f"N={model.n_params()/1e3:.0f}k B{B} S{S}")
+
+
+# ---------------------------------------------------------------------------
+# Kernel benches (interpret mode: correctness-level timing only)
+# ---------------------------------------------------------------------------
+
+def bench_kernels(quick: bool):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+
+    def run_kernel():
+        jax.block_until_ready(
+            flash_attention_fwd(q, k, v, causal=True, interpret=True))
+
+    def run_ref():
+        jax.block_until_ready(ref.attention_ref(q, k, v, causal=True))
+    bench("flash_attention_interpret_256", run_kernel, repeat=3,
+          derived="Pallas body in Python (CPU validation mode)")
+    bench("flash_attention_oracle_256", run_ref, repeat=3)
+
+
+# ---------------------------------------------------------------------------
+# Roofline bridge: summarize dry-run artifacts if present
+# ---------------------------------------------------------------------------
+
+def bench_roofline_bridge():
+    arts = sorted(glob.glob("artifacts/*__single__*.json"))
+    if not arts:
+        ROWS.append(("roofline_artifacts", -1.0,
+                     "none found; run repro.launch.dryrun --all first"))
+        return
+    from repro.launch.roofline import terms
+    n, frac_sum = 0, 0.0
+    for p in arts:
+        with open(p) as f:
+            a = json.load(f)
+        if a.get("skip"):
+            continue
+        t = terms(a)
+        tag = os.path.basename(p)[:-5].replace("__single", "")
+        is_baseline = p.endswith("__single__mpignite__native.json")
+        if is_baseline:
+            n += 1
+            frac_sum += t["roofline_fraction"]
+        ROWS.append((f"roofline_{tag}", 0.0,
+                     f"bottleneck={t['bottleneck']} "
+                     f"frac={t['roofline_fraction']:.3f}"))
+    if n:
+        ROWS.append(("roofline_mean_fraction_baselines", 0.0,
+                     f"{frac_sum/n:.3f} over {n} baseline cells"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    bench_listing1_matvec()
+    bench_listing2_ring()
+    bench_listing4_2d_matvec()
+    bench_figure1_api_parity()
+    bench_backend_byte_model()
+    bench_spmd_backends_subprocess(args.quick)
+    bench_model_steps(args.quick)
+    bench_kernels(args.quick)
+    bench_roofline_bridge()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in ROWS:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Serving example: continuous batching through the slot engine.
+
+A reduced qwen3 model serves a stream of prompts; requests are admitted
+as slots free, prefilled individually, and decoded as one batched step
+per engine tick (greedy sampling). Prints per-request generations and
+engine statistics (occupancy shows continuous batching at work).
+
+    PYTHONPATH=src python examples/serve_engine.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.parallel import axes as A
+from repro.parallel.ops import ParallelConfig, make_ops
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = dataclasses.replace(get_config("qwen3-4b", smoke=True),
+                              dtype=jnp.float32)
+    axes = A.MeshAxes(1, 1, 1)
+    pcfg = ParallelConfig(sequence_parallel=False, remat="none")
+    model = Model(cfg, axes, pcfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    ops = make_ops(axes, pcfg)
+    s_max = 64
+
+    prefill_fn = jax.jit(
+        lambda p, b: model.prefill(ops, p, b, s_max=s_max))
+    decode_fn = jax.jit(
+        lambda p, c, t, pos: model.decode(ops, p, c, t, pos))
+
+    eng = Engine(model, params, prefill_fn, decode_fn, max_slots=4,
+                 s_max=s_max)
+    rng = np.random.default_rng(0)
+    uids = []
+    for i in range(8):
+        prompt = rng.integers(0, cfg.vocab, 4 + i).astype(np.int32)
+        uids.append(eng.submit(prompt, max_new_tokens=8 + i % 3))
+
+    outputs = eng.run()
+    for uid in uids:
+        print(f"request {uid}: {outputs[uid]}")
+    s = eng.stats
+    print(f"\nprefills={s.prefills} decode_steps={s.decode_steps} "
+          f"tokens={s.tokens_out}")
+    occ = s.batch_occupancy
+    print(f"occupancy: mean={np.mean(occ):.2f} max={max(occ)} "
+          f"(continuous batching kept {np.mean(occ)/4:.0%} of slots busy)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end training driver example: a ~100M-parameter qwen3-style LM
+on synthetic data with the full substrate -- FSDP/TP-ready step, AdamW
+with fp32 master, checkpointing, failure injection + comm-degrade
+recovery, straggler monitoring.
+
+CPU-sized by default (--dim/--layers shrink the model; a few hundred
+steps complete in minutes). The exact same driver lowers unchanged on a
+TPU mesh -- only --data/--model-par change.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --dim 768 \
+        --layers 12   # the full ~100M configuration
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.launch import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[60])
+    args = ap.parse_args()
+
+    # a qwen3-family config scaled to the requested size
+    import repro.configs.qwen3_4b as q
+    cfg = dataclasses.replace(
+        q.CONFIG, name="qwen3-mini", n_layers=args.layers,
+        d_model=args.dim, n_heads=max(args.dim // 64, 2),
+        n_kv_heads=max(args.dim // 128, 1), head_dim=64,
+        d_ff=args.dim * 4, vocab=8192)
+
+    import repro.configs.registry as R
+    R.ARCH_MODULES["qwen3-mini"] = "qwen3_4b"   # reuse module namespace
+    import repro.configs.qwen3_4b as mod
+    mod.SMOKE = cfg
+
+    argv = ["--arch", "qwen3-mini", "--smoke",
+            "--steps", str(args.steps),
+            "--global-batch", str(args.global_batch),
+            "--seq", str(args.seq),
+            "--ckpt-every", "25",
+            "--ckpt-dir", "/tmp/repro_train_lm_ckpt"]
+    for s in args.fail_at:
+        argv += ["--fail-at", str(s)]
+    # launch/train.py runs the supervisor loop: on the injected failure it
+    # restores the checkpoint, degrades comm to the paper's master-relay
+    # backend for the recovery window, then swaps back.
+    return T.main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

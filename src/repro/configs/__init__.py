@@ -1,0 +1,4 @@
+from .registry import ARCHS, SHAPES, Shape, cell_plan, get_config, skip_reason
+
+__all__ = ["ARCHS", "SHAPES", "Shape", "cell_plan", "get_config",
+           "skip_reason"]

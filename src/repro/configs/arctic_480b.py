@@ -1,0 +1,24 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (kv=8) vocab=32000.
+
+Snowflake Arctic [hf:Snowflake/snowflake-arctic-base]: 128 experts top-2
+(d_ff=4864 each) in *parallel* with a dense residual MLP (d_ff=4864).
+56 query heads pad to 64 slots on a 16-way model axis (per-KV-group
+padding -- see models.common.gqa_layout); kv=8 replicates 2x.
+Optimizer: Adafactor (factored second moments) -- Adam state would not
+fit 480B params on 256 x 16GB chips; see train/optim.py and DESIGN.md.
+"""
+from ..models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", kind="moe", n_layers=35, d_model=7168,
+    n_heads=56, n_kv_heads=8, d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2, n_shared_experts=0, moe_d_ff=4864,
+    dense_residual=True, capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="arctic-smoke", kind="moe", n_layers=2, d_model=64,
+    n_heads=7, n_kv_heads=1, d_ff=96, vocab=103,
+    n_experts=8, top_k=2, n_shared_experts=0, moe_d_ff=96,
+    dense_residual=True, capacity_factor=1.5,
+)

@@ -1,0 +1,22 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504.
+
+Encoder-only (bidirectional attention), same trunk as wav2vec2
+[arXiv:2106.07447]. The CNN waveform frontend is a stub per assignment:
+``input_mode="frames"`` -- the batch carries precomputed (B, S, d) frame
+embeddings; a learned projector stands in for the post-CNN projection.
+No decode shapes (encoder has no autoregressive step); masked-unit
+prediction loss over the 504-unit codebook (padded to the TP vocab grid).
+"""
+from ..models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", kind="dense", n_layers=48, d_model=1280,
+    n_heads=16, n_kv_heads=16, d_ff=5120, vocab=504,
+    causal=False, act="gelu", input_mode="frames",
+)
+
+SMOKE = ModelConfig(
+    name="hubert-xlarge-smoke", kind="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, d_ff=128, vocab=103,
+    causal=False, act="gelu", input_mode="frames",
+)

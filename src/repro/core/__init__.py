@@ -1,0 +1,19 @@
+"""MPIgnite-JAX core: the paper's contribution as a composable JAX module.
+
+- ``groups``    : pure rank/group math (split, rings, byte-cost model)
+- ``local``     : thread-runtime communicator (paper's local mode; oracle)
+- ``comm``      : SPMD ``PeerComm`` over mesh axes (linear/ring/native)
+- ``closures``  : ``parallelize_func(f).execute(n)`` in local or SPMD mode
+"""
+from . import groups
+from .comm import PeerComm, cost_log, cost_scope
+from .closures import (MPIgniteContext, ParallelClosure, RANK_AXIS, flat_mesh,
+                       parallelize_func)
+from .local import LocalComm, ParallelFuncRDD
+
+__all__ = [
+    "groups", "PeerComm", "cost_log", "cost_scope", "MPIgniteContext",
+    "ParallelClosure",
+    "RANK_AXIS", "flat_mesh", "parallelize_func", "LocalComm",
+    "ParallelFuncRDD",
+]

@@ -1,0 +1,114 @@
+"""Parallel closures -- the paper's ``sc.parallelizeFunc(f).execute(n)``.
+
+Two execution modes mirror Spark's local vs. cluster deployments:
+
+- ``mode="local"``  : n lockstep python threads with a real message-matching
+  runtime (``LocalComm``) -- arbitrary payloads, futures, runtime split.
+- ``mode="spmd"``   : one program instance per device of a flat JAX mesh,
+  compiled with ``shard_map``; the closure receives a ``PeerComm`` and its
+  comm calls lower to ICI collectives. The closure's return values are
+  gathered to the driver as a list (paper: "an array of return values from
+  each process"), and the jit boundary is the implicit end-of-closure
+  barrier the paper describes.
+
+The same closure can run in both modes when it restricts itself to the
+static-routing subset (DESIGN.md section 2), which is how the equivalence
+tests pin SPMD semantics to the runtime oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .comm import PeerComm
+from .local import ParallelFuncRDD
+
+RANK_AXIS = "ranks"
+
+
+def flat_mesh(n: int | None = None, devices=None) -> Mesh:
+    """A 1-D mesh over the first n devices (paper's flat rank space)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices) if n is None else n
+    if n > len(devices):
+        raise ValueError(f"execute({n}) exceeds available devices "
+                         f"({len(devices)}); use mode='local' for "
+                         "oversubscription")
+    return jax.make_mesh((n,), (RANK_AXIS,),
+                         devices=np.asarray(devices[:n]))
+
+
+class ParallelClosure:
+    """RDD-of-a-function (paper section 3.2)."""
+
+    def __init__(self, fn: Callable, backend: str = "native",
+                 timeout: float = 60.0):
+        self._fn = fn
+        self._backend = backend
+        self._timeout = timeout
+
+    def execute(self, n: int | None = None, *, mode: str = "local",
+                mesh: Mesh | None = None, jit: bool = True) -> list:
+        if mode == "local":
+            if n is None:
+                raise ValueError("local mode requires an instance count")
+            return ParallelFuncRDD(self._fn, timeout=self._timeout).execute(n)
+        if mode != "spmd":
+            raise ValueError(f"unknown mode {mode!r}")
+        mesh = mesh if mesh is not None else flat_mesh(n)
+        size = mesh.shape[RANK_AXIS]
+        comm = PeerComm.world(RANK_AXIS, size, backend=self._backend)
+
+        def body():
+            out = self._fn(comm)
+            if out is None:
+                out = jnp.zeros((), jnp.int32)
+            return jax.tree.map(lambda v: jnp.asarray(v)[None], out)
+
+        smapped = jax.shard_map(body, mesh=mesh, in_specs=(),
+                                out_specs=P(RANK_AXIS))
+        run = jax.jit(smapped) if jit else smapped
+        with jax.set_mesh(mesh):
+            out = run()
+        out = jax.tree.map(np.asarray, out)
+        leaves = jax.tree.leaves(out)
+        count = leaves[0].shape[0] if leaves else size
+        return [jax.tree.map(lambda v: v[i], out) for i in range(count)]
+
+
+def parallelize_func(fn: Callable, *, backend: str = "native",
+                     timeout: float = 60.0) -> ParallelClosure:
+    """``sc.parallelizeFunc`` analogue. The closure takes the communicator
+    as its only argument; other inputs arrive via python closure capture,
+    exactly as in the paper's listings."""
+    return ParallelClosure(fn, backend=backend, timeout=timeout)
+
+
+class MPIgniteContext:
+    """Small driver-side facade mirroring the SparkContext the listings use
+    (``sc.parallelizeFunc(...)``)."""
+
+    def __init__(self, *, default_mode: str = "local",
+                 backend: str = "native"):
+        self.default_mode = default_mode
+        self.backend = backend
+
+    def parallelize_func(self, fn: Callable) -> "_BoundClosure":
+        return _BoundClosure(ParallelClosure(fn, backend=self.backend),
+                             self.default_mode)
+
+    parallelizeFunc = parallelize_func  # paper spelling
+
+
+class _BoundClosure:
+    def __init__(self, closure: ParallelClosure, mode: str):
+        self._closure = closure
+        self._mode = mode
+
+    def execute(self, n: int | None = None, **kw) -> list:
+        kw.setdefault("mode", self._mode)
+        return self._closure.execute(n, **kw)

@@ -1,0 +1,200 @@
+"""Pure (numpy/python) rank-group machinery shared by every comm backend.
+
+This module is deliberately free of JAX so that its invariants can be
+property-tested with hypothesis directly: communicator splits, ring
+permutations, chunking/padding and the byte-cost model of each collective
+algorithm are all plain functions of python ints.
+
+Terminology
+-----------
+- *axis rank*: a device's index along the mesh axis a communicator spans.
+- *comm rank*: the rank the user sees inside a (possibly split)
+  communicator -- its position within its group.
+- *groups*: a partition of the axis ranks into equally-sized tuples.
+  ``groups=None`` means the single group ``(0, 1, ..., P-1)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Sequence
+
+Groups = tuple[tuple[int, ...], ...]
+
+
+def world_groups(size: int) -> Groups:
+    return (tuple(range(size)),)
+
+
+def validate_groups(groups: Groups, size: int) -> None:
+    """Groups must partition range(size) into equal-size, duplicate-free sets."""
+    flat = [r for g in groups for r in g]
+    if sorted(flat) != list(range(size)):
+        raise ValueError(
+            f"groups {groups} do not partition range({size})")
+    sizes = {len(g) for g in groups}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"unequal group sizes {sorted(len(g) for g in groups)}; the SPMD "
+            "backends require uniform sub-communicator sizes")
+
+
+def split_groups(parent: Groups, colors: Sequence[int],
+                 keys: Sequence[int]) -> dict[int, Groups]:
+    """MPI_Comm_split semantics (paper section 3.1).
+
+    ``colors[i]``/``keys[i]`` are given per *comm rank* ``i`` of each parent
+    group (every parent group is split with the same color/key tables, which
+    is what a mesh-structured split needs). Within a color, members are
+    ordered by (key, parent comm rank) -- exactly the sort the MPIgnite root
+    performs before broadcasting the new rank mapping.
+
+    Returns ``{color: groups}`` where each value partitions only the ranks
+    holding that color (across all parent groups).
+    """
+    n = len(colors)
+    if len(keys) != n:
+        raise ValueError("colors and keys must have equal length")
+    for g in parent:
+        if len(g) != n:
+            raise ValueError(
+                f"color/key tables (len {n}) must match parent group size {len(g)}")
+    out: dict[int, list[tuple[int, ...]]] = {}
+    for g in parent:
+        bycolor: dict[int, list[tuple[int, int]]] = {}
+        for comm_rank, axis_rank in enumerate(g):
+            bycolor.setdefault(colors[comm_rank], []).append(
+                (keys[comm_rank], comm_rank))
+        for color, members in bycolor.items():
+            members.sort()  # by (key, parent comm rank)
+            out.setdefault(color, []).append(
+                tuple(g[comm_rank] for _, comm_rank in members))
+    return {c: tuple(gs) for c, gs in out.items()}
+
+
+def context_id(groups: Groups, parent_ctx: int) -> int:
+    """Deterministic context identifier for a communicator (paper: used to
+    fence messages within the group that participated in a split)."""
+    h = hashlib.sha256(repr((parent_ctx, groups)).encode()).hexdigest()
+    return int(h[:12], 16)
+
+
+def comm_rank_table(groups: Groups, size: int) -> list[int]:
+    """axis rank -> comm rank (position within its group)."""
+    table = [-1] * size
+    for g in groups:
+        for i, axis_rank in enumerate(g):
+            table[axis_rank] = i
+    return table
+
+
+def group_id_table(groups: Groups, size: int) -> list[int]:
+    """axis rank -> index of the group containing it."""
+    table = [-1] * size
+    for gi, g in enumerate(groups):
+        for axis_rank in g:
+            table[axis_rank] = gi
+    return table
+
+
+def ring_perm(groups: Groups, shift: int) -> list[tuple[int, int]]:
+    """Global (src, dst) pairs realizing a ring shift by ``shift`` within
+    every group simultaneously. A union of in-group cycles is still a valid
+    global permutation, which is what lax.ppermute requires."""
+    pairs: list[tuple[int, int]] = []
+    for g in groups:
+        p = len(g)
+        for i, src in enumerate(g):
+            pairs.append((src, g[(i + shift) % p]))
+    return pairs
+
+
+def p2p_perm(groups: Groups, pairs: Sequence[tuple[int, int]],
+             size: int) -> list[tuple[int, int]]:
+    """Translate comm-rank (src, dst) pairs into global axis-rank pairs,
+    enforcing the paper's context isolation *statically*: a pair that crosses
+    group boundaries is a trace-time error, and duplicate senders/receivers
+    (not a permutation) are rejected."""
+    gid = group_id_table(groups, size)
+    out: list[tuple[int, int]] = []
+    seen_src: set[int] = set()
+    seen_dst: set[int] = set()
+    for src_cr, dst_cr in pairs:
+        for g in groups:
+            p = len(g)
+            if not (0 <= src_cr < p and 0 <= dst_cr < p):
+                raise ValueError(
+                    f"p2p rank pair ({src_cr},{dst_cr}) out of range for "
+                    f"communicator of size {p}")
+            s, d = g[src_cr], g[dst_cr]
+            if gid[s] != gid[d]:  # cannot happen given construction; guard anyway
+                raise ValueError(
+                    "message would cross sub-communicator boundary "
+                    f"({s} -> {d}); context isolation violated")
+            if s in seen_src:
+                raise ValueError(f"duplicate sender comm-rank {src_cr}")
+            if d in seen_dst:
+                raise ValueError(f"duplicate receiver comm-rank {dst_cr}")
+            seen_src.add(s)
+            seen_dst.add(d)
+            out.append((s, d))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Byte-cost model (per device, per call) for each collective algorithm.
+# These analytic counts back the §Roofline collective term and are asserted
+# against the HLO-parsed byte counts in tests (within padding slack).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    op: str
+    backend: str
+    bytes_per_device: int
+    steps: int
+
+
+def collective_cost(op: str, backend: str, nbytes: int, p: int) -> CollectiveCost:
+    """Bytes sent per device for one collective of payload ``nbytes`` over a
+    group of size ``p``.
+
+    linear -- the paper's phase-1 master-relay: gather-to-root then
+    root-broadcast, O(p * S) wire bytes, 2(p-1) serial full-size steps.
+    ring   -- phase-2 peer-to-peer: chunked reduce-scatter + all-gather,
+    O(2S) bytes in 2(p-1) chunk-size steps.
+    native -- XLA collectives; modeled with the ring byte count (XLA lowers
+    to ring/tree variants with the same asymptotics) but fusable/overlappable.
+    """
+    if p <= 1:
+        return CollectiveCost(op, backend, 0, 0)
+    S = nbytes
+    if backend == "linear":
+        table = {
+            "allreduce": (2 * (p - 1) * S, 2 * (p - 1)),
+            "broadcast": ((p - 1) * S, p - 1),
+            "allgather": (2 * (p - 1) * S, 2 * (p - 1)),   # relay in + relay out
+            "reducescatter": ((2 * p - 1) * S // 1, 2 * (p - 1)),
+            "alltoall": ((p - 1) * S, p - 1),              # relay full buffer
+            "p2p": (S, 1),
+        }
+    elif backend in ("ring", "native"):
+        table = {
+            "allreduce": (2 * S * (p - 1) // p, 2 * (p - 1)),
+            "broadcast": ((p - 1) * S if backend == "ring" else S, p - 1),
+            "allgather": (S * (p - 1) // p, p - 1),
+            "reducescatter": (S * (p - 1) // p, p - 1),
+            "alltoall": (S * (p - 1) // p, p - 1),
+            "p2p": (S, 1),
+        }
+    else:
+        raise ValueError(f"unknown backend {backend}")
+    b, steps = table[op]
+    return CollectiveCost(op, backend, int(b), steps)
+
+
+def pad_to_multiple(n: int, p: int) -> int:
+    return (n + p - 1) // p * p
+
+
+ReduceFn = Callable  # (a, b) -> elementwise combine; must be associative

@@ -1,0 +1,3 @@
+from .pipeline import MemmapTokens, Prefetcher, SyntheticTokens, make_batch
+
+__all__ = ["MemmapTokens", "Prefetcher", "SyntheticTokens", "make_batch"]

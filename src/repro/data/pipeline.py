@@ -1,0 +1,102 @@
+"""Deterministic, restart-safe data pipeline.
+
+Design-for-1000-nodes property (DESIGN.md section 8): the pipeline is
+*stateless by global step* -- batch(step) is a pure function of
+(seed, step), so restart/elastic-rescale never needs pipeline state in
+the checkpoint, and any host can compute any shard's slice. Sources:
+
+- ``SyntheticTokens``: Philox-keyed synthetic stream (benchmarks, tests).
+- ``MemmapTokens``: fixed binary token file, block-shuffled by step.
+
+``Prefetcher`` overlaps host batch assembly with device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import numpy as np
+
+from ..models.common import ModelConfig
+
+
+class SyntheticTokens:
+    def __init__(self, vocab: int, seq: int, global_batch: int,
+                 seed: int = 0):
+        self.vocab, self.seq, self.gb, self.seed = vocab, seq, global_batch, seed
+
+    def batch(self, step: int) -> np.ndarray:
+        rng = np.random.Generator(np.random.Philox(key=[self.seed, step]))
+        return rng.integers(0, self.vocab, (self.gb, self.seq),
+                            dtype=np.int32)
+
+
+class MemmapTokens:
+    """Token stream from a flat binary file of int32 tokens."""
+
+    def __init__(self, path: str, vocab: int, seq: int, global_batch: int,
+                 seed: int = 0):
+        self.arr = np.memmap(path, dtype=np.int32, mode="r")
+        self.vocab, self.seq, self.gb, self.seed = vocab, seq, global_batch, seed
+        self.n_windows = len(self.arr) // (seq + 1)
+        if self.n_windows < global_batch:
+            raise ValueError("token file too small for one batch")
+
+    def batch(self, step: int) -> np.ndarray:
+        rng = np.random.Generator(np.random.Philox(key=[self.seed, step]))
+        idx = rng.choice(self.n_windows, self.gb, replace=False)
+        out = np.empty((self.gb, self.seq), np.int32)
+        for i, w in enumerate(idx):
+            out[i] = self.arr[w * (self.seq + 1): w * (self.seq + 1) + self.seq]
+        return np.clip(out, 0, self.vocab - 1)
+
+
+def make_batch(cfg: ModelConfig, source, step: int) -> dict:
+    """Assemble the model-specific batch dict for one step."""
+    rng = np.random.Generator(np.random.Philox(key=[7, step]))
+    tokens = source.batch(step)
+    B, S = tokens.shape
+    if cfg.input_mode == "frames":
+        return {"frames": rng.standard_normal((B, S, cfg.d_model))
+                .astype(np.float32) * 0.02,
+                "labels": tokens}
+    batch = {"tokens": tokens}
+    if cfg.cross_attn_every:
+        batch["image_emb"] = rng.standard_normal(
+            (B, cfg.n_image_tokens, cfg.vision_d)).astype(np.float32) * 0.02
+    return batch
+
+
+class Prefetcher:
+    """Host-side prefetch: compute batch(step+1..step+depth) on a thread."""
+
+    def __init__(self, fn: Callable[[int], dict], start_step: int,
+                 depth: int = 2):
+        self.fn = fn
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.next_step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self.next_step
+        while not self._stop.is_set():
+            try:
+                self.q.put((step, self.fn(step)), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def get(self) -> tuple[int, dict]:
+        return self.q.get()
+
+    def stop(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

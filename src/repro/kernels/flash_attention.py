@@ -1,0 +1,171 @@
+"""Flash attention for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+Online-softmax attention with q/kv block tiling; causal, sliding-window
+and bidirectional masking; GQA served *without materializing* repeated KV
+heads -- the kv BlockSpec index_map divides the head index by the group
+size, so each q-head block streams its kv head straight from HBM.
+
+Grid: (B, Hq, Sq/bq, Sk/bk), kv innermost. The (acc, m, l) running
+softmax state lives in VMEM scratch and persists across the innermost
+grid dimension (standard TPU flash pattern: initialize at j==0, finalize
+at j==last). Block sizes default to 128x128 (MXU-aligned); D is kept
+whole per block (<= 256 for all assigned archs).
+
+Backward is recompute-based via custom_vjp against the jnp oracle
+(DESIGN.md: the training path's bwd FLOPs come from the XLA blockwise
+implementation; the kernel targets the serving/prefill hot loop).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            block_q: int, block_k: int, sk: int, causal: bool,
+            window: int, q_offset: int, scale: float):
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    i = pl.program_id(2)
+    q_pos = q_offset + i * block_q + lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # skip fully-masked kv blocks (causal upper triangle / outside window)
+    q_last = q_offset + i * block_q + block_q - 1
+    q_first = q_offset + i * block_q
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= (j * block_k) <= q_last
+    if window:
+        needed &= (j * block_k + block_k) > (q_first - window)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < sk
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: (B,Sq,Hq,D); k/v: (B,Sk,Hkv,D) with Hq % Hkv == 0."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    gq = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # pad sequences to block multiples
+    pq = -Sq % block_q
+    pk = -Sk % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    # layout: (B, H, S, D) blocks
+    qp = qp.transpose(0, 2, 1, 3)
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+    grid = (B, Hq, (Sq + pq) // block_q, (Sk + pk) // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          sk=Sk, causal=causal, window=window,
+                          q_offset=q_offset, scale=1.0 / math.sqrt(D)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, gq=gq: (b, h // gq, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, gq=gq: (b, h // gq, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq + pq, D), q.dtype),
+        # (acc, m, l) running-softmax state: VMEM scratch persisting
+        # across the innermost (kv) grid dimension
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :Sq] if pq else out
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp: forward = kernel, backward = recompute via the jnp oracle
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=0, q_offset=0,
+                    block_q=128, block_k=128, interpret=False):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, q_offset, block_q, block_k, interpret, res, g):
+    from . import ref
+    q, k, v = res
+    def f(q, k, v):
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

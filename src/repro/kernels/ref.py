@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the reference each kernel's
+shape/dtype sweep asserts against, and the source of custom_vjp backward
+rules where the backward kernel is not hand-written)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """q: (B,Sq,Hq,D); k/v: (B,Sk,Hkv,D), Hq = gq*Hkv. fp32 softmax."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    gq = Hq // Hkv
+    if gq > 1:
+        k = jnp.repeat(k, gq, axis=2)
+        v = jnp.repeat(v, gq, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * D ** -0.5,
+                   k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_ref(x, dt, a_log, Bm, Cm):
+    """Sequential (exact) SSD recurrence. x: (B,S,H,P); dt: (B,S,H);
+    a_log: (H,); Bm/Cm: (B,S,N). Returns (y, final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp                     # (B,H,P),(B,H),(B,N)x2
+        dec = jnp.exp(dt_t * A[None, :])              # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], b_t)
+        state = state * dec[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * w.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,98 @@
+"""Mamba-2 SSD chunked scan for TPU (pl.pallas_call + BlockSpec tiling).
+
+TPU adaptation of the GPU SSD kernel (DESIGN.md section 7): the warp-level
+scan becomes the matmul block decomposition -- per (batch, head) the
+sequence is walked chunk by chunk on the innermost grid dimension; the
+(P x N) inter-chunk state lives in VMEM scratch and persists across
+chunks, while all intra-chunk work (decay matrix, C B^T scores, local
+outputs) is dense (Q x Q)/(Q x N)/(Q x P) matmuls shaped for the MXU
+(Q=128, N=64, P=64 for zamba2-2.7b).
+
+Grid: (B, H, S/Q), chunk index innermost. Inputs arrive pre-discretized
+exactly like models.ssm.ssd_chunked: x (B,S,H,P), dt (B,S,H) (softplus
+applied), a_log (H,), Bm/Cm (B,S,N) (groups already broadcast).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, state_ref, *,
+            chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)            # (Q,)
+    a_h = -jnp.exp(alog_ref[0].astype(jnp.float32))     # scalar
+    bm = b_ref[0].astype(jnp.float32)                   # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                   # (Q, N)
+
+    a = dt * a_h                                        # (Q,) log-decays
+    cum = jnp.cumsum(a)                                 # inclusive
+    xdt = x * dt[:, None]                               # (Q, P)
+
+    # ---- intra-chunk (lower-triangular decay kernel) ----
+    seg = cum[:, None] - cum[None, :]                   # l[i,j]=sum(j+1..i)
+    Q = chunk
+    tri = lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)               # (Q, Q)
+    scores = lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y = lax.dot_general(L * scores, xdt, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk contribution from carried state (N, P) ----
+    cdecay = jnp.exp(cum)[:, None]                      # (Q, 1)
+    y += cdecay * lax.dot_general(cm, state_ref[...],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # ---- state update to chunk end ----
+    total = cum[-1]
+    w = jnp.exp(total - cum)[:, None] * bm              # (Q, N)
+    state_ref[...] = state_ref[...] * jnp.exp(total) + lax.dot_general(
+        w, xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, Bm, Cm, *, chunk: int = 128,
+             interpret: bool = False):
+    """Returns (y, final_state (B,H,P,N)) matching models.ssm.ssd_chunked.
+    Final state is recomputed by the XLA path when needed (prefill); the
+    kernel emits y only (training hot path)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "sequence must divide into SSD chunks"
+    grid = (B, H, S // Q)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, Bm, Cm)
+    return y

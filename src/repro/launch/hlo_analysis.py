@@ -1,0 +1,468 @@
+"""Optimized-HLO cost analysis with loop trip-count accounting.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every instruction once
+-- a ``while`` body (how lax.scan lowers the layer stack) is counted for a
+*single* iteration. This module re-derives the three roofline inputs from
+``compiled.as_text()`` with multiplicities:
+
+- FLOPs: ``dot`` ops cost 2 * prod(result) * contracted_size; everything
+  else is approximated at 1 flop/element of its result (dots dominate all
+  ten architectures).
+- Collective wire bytes per device, converted per op type from operand
+  bytes and the replica-group size parsed from the op.
+- Memory bytes: a *fusion-boundary* HBM traffic model -- each top-level
+  executed instruction (including fusions, whose internals stay in
+  registers/VMEM) reads its operands and writes its result once, with two
+  in-loop refinements: a fusion operand consumed only through
+  ``dynamic-slice`` is charged at slice size (a scan body reads one layer
+  of the stacked weights, not all L); a buffer that is updated in place by
+  ``dynamic-update-slice`` is charged at update size (XLA aliases the
+  carry). Aliasing ops (copy/bitcast/tuple/get-tuple-element) are skipped:
+  XLA:CPU materializes loop-carried copies a TPU would alias away.
+
+bf16 normalization: the CPU backend has no native bf16 and legalizes all
+bf16 compute to f32, doubling every byte count relative to the TPU-target
+program. With ``norm_float_bytes=2`` (the dry-run default), floating
+dtypes are counted at min(native, 2) bytes. This restores the intended
+bf16 sizes exactly for activations/params/grads/collectives and
+*undercounts* the (genuinely fp32) optimizer-state traffic 2x -- a ~1%
+effect, stated in EXPERIMENTS.md.
+
+While multipliers come from the ``known_trip_count`` backend_config that
+XLA attaches after loop analysis (verified emitted by the CPU backend);
+a while without one counts once. All quantities are per-device (the SPMD
+program is identical everywhere); multiply by chip count for totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+INSTR_RE = re.compile(
+    r"^\s+(ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.+?\)?)\s+([\w\-]+)\(")
+TRIP_RE = re.compile(r'known_trip_count\\?":\s*\{\\?"n\\?":\\?"(\d+)')
+CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[\d,\s]*?(?:\},\{[\d,\s]*?)*\}\}|\[[\d,]+\]<=\[[\d,]*\])")
+CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# collective opcodes sometimes print with suffixes (-start/-done)
+COLL_CANON = {}
+for c in COLLECTIVES:
+    COLL_CANON[c] = c
+    COLL_CANON[c + "-start"] = c
+
+
+FLOAT_DTYPES = {"f64", "f32", "bf16", "f16"}
+
+
+def shape_bytes(shape_str: str, norm_float: int = 0) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = DTYPE_BYTES[dt]
+        if norm_float and dt in FLOAT_DTYPES:
+            b = min(b, norm_float)
+        total += n * b
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(shape_str):
+        if m.group(1) not in DTYPE_BYTES:
+            continue
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_dims(shape_str: str) -> list[int]:
+    m = SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _operand_section(line: str, opcode: str) -> str:
+    i = line.index(opcode + "(") + len(opcode)
+    depth = 0
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[i + 1:j]
+    return line[i + 1:]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    shape_str: str
+    operands: list[str]
+    attrs: str
+    calls: list[str]
+    trip: int
+    is_root: bool = False
+
+
+def parse_computations(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "->" in line and \
+                line.rstrip().endswith("{"):
+            tok = line.split()
+            name = tok[1] if tok[0] == "ENTRY" else tok[0]
+            comps[name.lstrip("%")] = cur = []
+            continue
+        if cur is None:
+            continue
+        mi = INSTR_RE.match(line)
+        if mi is None:
+            continue
+        root, name, shape_str, opcode = mi.groups()
+        attrs_start = line.index(opcode + "(")
+        ops_text = _operand_section(line, opcode)
+        attrs = line[attrs_start + len(ops_text):]
+        operands = OPERAND_RE.findall(ops_text)
+        calls, trip = [], 1
+        if opcode == "while":
+            mb = BODY_RE.search(line)
+            if mb:
+                calls.append(mb.group(1))
+            mt = TRIP_RE.search(line)
+            trip = int(mt.group(1)) if mt else 1
+        elif opcode == "conditional":
+            mb = BRANCHES_RE.search(line)
+            if mb:
+                calls += [c.strip().lstrip("%") for c in mb.group(1).split(",")]
+        elif opcode in ("fusion", "call"):
+            mc = CALLS_RE.search(line)
+            if mc:
+                calls.append(mc.group(1))
+        cur.append(Instr(name, opcode, shape_str, operands, line, calls,
+                         trip, is_root=bool(root)))
+    return comps
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    mem_bytes: float = 0.0        # CPU-fusion-granularity (upper bound)
+    mem_bytes_fused: float = 0.0  # ideal-fusion model: dots/colls/DUS/params
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+    @property
+    def coll_wire_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "mem_bytes": self.mem_bytes,
+                "mem_bytes_fused": self.mem_bytes_fused,
+                "coll_wire_bytes": self.coll_wire_bytes,
+                "coll_bytes": dict(self.coll_bytes),
+                "coll_count": dict(self.coll_count)}
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = GROUPS_RE.search(attrs)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    dims = g[1:g.index("]")].split(",")
+    return int(dims[-1]) if len(dims) >= 2 else default
+
+
+def wire_bytes(op: str, operand_bytes: int, result_bytes: int,
+               p: int) -> float:
+    """Bytes each device puts on ICI links for one collective (ring)."""
+    if p <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * operand_bytes * (p - 1) / p
+    if op == "all-gather":
+        return result_bytes * (p - 1) / p
+    if op == "reduce-scatter":
+        return operand_bytes * (p - 1) / p
+    if op == "all-to-all":
+        return operand_bytes * (p - 1) / p
+    if op == "collective-permute":
+        return float(operand_bytes)
+    return 0.0
+
+
+_SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "copy", "while", "conditional", "call",
+             "after-all", "add-dependency"}
+_ZERO_FLOP = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "copy", "while", "conditional", "call", "fusion",
+              "broadcast", "reshape", "transpose", "slice", "concatenate",
+              "dynamic-slice", "dynamic-update-slice", "iota", "pad",
+              "reverse", "after-all", "add-dependency", "gather", "scatter",
+              "rng-bit-generator"}
+
+
+def _fusion_mem(body: list[Instr], table: dict, operand_shapes: list[str],
+                norm: int) -> float:
+    """Fusion-boundary traffic with dynamic-slice / in-place-DUS awareness.
+
+    Reads: body parameter i (bound to operand_shapes[i]) is charged at
+    (a) 0 if it is a buffer updated in place by a dynamic-update-slice,
+    (b) the sum of its dynamic-slice results if only read through slices,
+    (c) full size otherwise.
+    Writes: update sizes of DUS roots, else the root result size.
+    """
+    consumers: dict[str, list[Instr]] = defaultdict(list)
+    params: dict[str, int] = {}
+    for ins in body:
+        if ins.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.attrs)
+            params[ins.name] = int(m.group(1)) if m else len(params)
+        for o in ins.operands:
+            consumers[o].append(ins)
+
+    dus_list = [i for i in body if i.opcode == "dynamic-update-slice"]
+    dus_buffers = set()
+    for d in dus_list:
+        if d.operands:
+            # walk through bitcast/copy chains back to a parameter
+            src = d.operands[0]
+            seen = 0
+            while src not in params and seen < 4:
+                producers = [i for i in body if i.name == src]
+                if producers and producers[0].opcode in ("bitcast", "copy") \
+                        and producers[0].operands:
+                    src = producers[0].operands[0]
+                    seen += 1
+                else:
+                    break
+            if src in params:
+                dus_buffers.add(src)
+
+    read = 0.0
+    for pname, pidx in params.items():
+        if pname in dus_buffers:
+            continue                      # aliased in place
+        cons = consumers.get(pname, [])
+        through = []
+        only_slices = bool(cons)
+        for c in cons:
+            if c.opcode in ("bitcast", "copy"):
+                c2 = consumers.get(c.name, [])
+                through.extend(c2)
+            else:
+                through.append(c)
+        only_slices = bool(through) and all(
+            t.opcode == "dynamic-slice" for t in through)
+        full = shape_bytes(operand_shapes[pidx], norm) \
+            if pidx < len(operand_shapes) else 0
+        if only_slices:
+            read += min(sum(shape_bytes(t.shape_str, norm)
+                            for t in through), full)
+        else:
+            read += full
+
+    if dus_list:
+        write = sum(shape_bytes(table.get(d.operands[1], ""), norm)
+                    if len(d.operands) > 1 else 0 for d in dus_list)
+    else:
+        roots = [i for i in body if i.is_root]
+        write = shape_bytes(roots[-1].shape_str, norm) if roots else 0
+    return read + write
+
+
+def summarize(text: str, n_devices: int,
+              norm_float_bytes: int = 2) -> CostSummary:
+    comps = parse_computations(text)
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    entry = m.group(1) if m else next(iter(comps))
+    norm = norm_float_bytes
+
+    tables = {name: {i.name: i.shape_str for i in instrs}
+              for name, instrs in comps.items()}
+
+    memo: dict[tuple, CostSummary] = {}
+
+    def flops_of(name: str) -> float:
+        """FLOPs of a computation, recursing into every call."""
+        key = ("f", name)
+        if key in memo:
+            return memo[key]
+        memo[key] = 0.0
+        total = 0.0
+        table = tables.get(name, {})
+        for ins in comps.get(name, []):
+            mult = ins.trip
+            res_e = shape_elems(ins.shape_str)
+            if ins.opcode == "dot":
+                mcon = CONTRACT_RE.search(ins.attrs)
+                contracted = 1
+                if mcon and ins.operands:
+                    lhs_dims = shape_dims(table.get(ins.operands[0], ""))
+                    for ci in mcon.group(1).split(","):
+                        if ci != "" and int(ci) < len(lhs_dims):
+                            contracted *= lhs_dims[int(ci)]
+                total += 2.0 * res_e * contracted * mult
+            elif ins.calls:
+                total += sum(flops_of(c) for c in ins.calls) * mult
+            elif ins.opcode not in _ZERO_FLOP:
+                total += float(res_e) * mult
+        memo[key] = total
+        return total
+
+    def cost_of(name: str) -> CostSummary:
+        key = ("c", name)
+        if key in memo:
+            return memo[key]
+        memo[key] = CostSummary()
+        total = CostSummary()
+        table = tables.get(name, {})
+        for ins in comps.get(name, []):
+            mult = ins.trip
+            res_b = shape_bytes(ins.shape_str, norm)
+            op_b = sum(shape_bytes(table.get(o, ""), norm)
+                       for o in ins.operands)
+            opc = COLL_CANON.get(ins.opcode, ins.opcode)
+            if opc in COLLECTIVES:
+                p = _group_size(ins.attrs, n_devices)
+                total.coll_bytes[opc] += wire_bytes(opc, op_b, res_b, p) * mult
+                total.coll_count[opc] += mult
+                total.mem_bytes += (op_b + res_b) * mult
+            elif ins.opcode == "fusion":
+                total.flops += sum(flops_of(c) for c in ins.calls) * mult
+                body = comps.get(ins.calls[0], []) if ins.calls else []
+                operand_shapes = [table.get(o, "") for o in ins.operands]
+                total.mem_bytes += _fusion_mem(
+                    body, tables.get(ins.calls[0], {}), operand_shapes,
+                    norm) * mult
+            elif ins.calls:   # while / conditional / call
+                for c in ins.calls:
+                    sub = cost_of(c)
+                    total.flops += sub.flops * mult
+                    total.mem_bytes += sub.mem_bytes * mult
+                    for k, v in sub.coll_bytes.items():
+                        total.coll_bytes[k] += v * mult
+                    for k, v in sub.coll_count.items():
+                        total.coll_count[k] += v * mult
+            elif ins.opcode == "dot":
+                mcon = CONTRACT_RE.search(ins.attrs)
+                contracted = 1
+                if mcon and ins.operands:
+                    lhs_dims = shape_dims(table.get(ins.operands[0], ""))
+                    for ci in mcon.group(1).split(","):
+                        if ci != "" and int(ci) < len(lhs_dims):
+                            contracted *= lhs_dims[int(ci)]
+                total.flops += 2.0 * res_e_of(ins) * contracted * mult
+                total.mem_bytes += (op_b + res_b) * mult
+            else:
+                if ins.opcode not in _ZERO_FLOP:
+                    total.flops += float(res_e_of(ins)) * mult
+                if ins.opcode not in _SKIP_MEM:
+                    total.mem_bytes += (op_b + res_b) * mult
+        memo[key] = total
+        return total
+
+    def res_e_of(ins: Instr) -> int:
+        return shape_elems(ins.shape_str)
+
+    def fused_mem_of(name: str) -> float:
+        """Ideal-fusion HBM traffic: dots, collectives, and in-place
+        updates only -- every elementwise op assumed fused away (what the
+        TPU backend actually does). Recurses into fusion bodies so dots
+        fused with epilogues still count."""
+        key = ("fm", name)
+        if key in memo:
+            return memo[key]
+        memo[key] = 0.0
+        total = 0.0
+        table = tables.get(name, {})
+        for ins in comps.get(name, []):
+            mult = ins.trip
+            opc = COLL_CANON.get(ins.opcode, ins.opcode)
+            if ins.opcode == "dot":
+                op_b = sum(shape_bytes(table.get(o, ""), norm)
+                           for o in ins.operands)
+                total += (op_b + shape_bytes(ins.shape_str, norm)) * mult
+            elif opc in COLLECTIVES:
+                op_b = sum(shape_bytes(table.get(o, ""), norm)
+                           for o in ins.operands)
+                total += (op_b + shape_bytes(ins.shape_str, norm)) * mult
+            elif ins.opcode == "dynamic-update-slice":
+                if len(ins.operands) > 1:
+                    total += 2 * shape_bytes(
+                        table.get(ins.operands[1], ""), norm) * mult
+            for c in ins.calls:
+                total += fused_mem_of(c) * mult
+        memo[key] = total
+        return total
+
+    out = cost_of(entry)
+    param_bytes = sum(shape_bytes(i.shape_str, norm)
+                      for i in comps.get(entry, [])
+                      if i.opcode == "parameter")
+    out.mem_bytes_fused = fused_mem_of(entry) + param_bytes
+    return out
+
+
+def collective_schedule(text: str, n_devices: int,
+                        norm_float_bytes: int = 2) -> list[dict]:
+    """Flat list of collectives with multiplicity (for EXPERIMENTS.md)."""
+    comps = parse_computations(text)
+    tables = {name: {i.name: i.shape_str for i in instrs}
+              for name, instrs in comps.items()}
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    entry = m.group(1) if m else next(iter(comps))
+    out: list[dict] = []
+    norm = norm_float_bytes
+
+    def walk(name: str, mult: int):
+        table = tables.get(name, {})
+        for ins in comps.get(name, []):
+            opc = COLL_CANON.get(ins.opcode, ins.opcode)
+            if opc in COLLECTIVES:
+                op_b = sum(shape_bytes(table.get(o, ""), norm)
+                           for o in ins.operands)
+                res_b = shape_bytes(ins.shape_str, norm)
+                p = _group_size(ins.attrs, n_devices)
+                out.append({"op": opc, "operand_bytes": op_b,
+                            "result_bytes": res_b, "group": p,
+                            "times": mult,
+                            "wire_bytes": wire_bytes(opc, op_b, res_b, p)
+                            * mult})
+            for c in ins.calls:
+                walk(c, mult * ins.trip)
+    walk(entry, 1)
+    return out

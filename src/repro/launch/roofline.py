@@ -1,0 +1,143 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md section Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip          [s]
+  memory     = HLO_bytes_per_device / HBM_bandwidth                [s]
+  collective = collective_wire_bytes_per_device / ICI_link_bw      [s]
+(The artifact quantities are per-device; dividing per-device work by
+per-chip rates is identical to the assignment's global/(chips*rate).)
+
+Terms are *structural* estimates from the compiled 512-way SPMD program on
+the CPU backend (same partitioner, no TPU codegen) -- stated prominently
+in EXPERIMENTS.md. The dominant term is the bottleneck the perf loop
+(section Perf) iterates on; MODEL_FLOPS/HLO_FLOPs flags padding, remat
+recompute and causal-masking waste.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HW = {
+    "peak_flops": 197e12,     # TPU v5e bf16 per chip
+    "hbm_bw": 819e9,          # B/s per chip
+    "ici_bw": 50e9,           # B/s per link
+}
+
+
+def terms(art: dict) -> dict:
+    nd = art["n_devices"]
+    flops_dev = art["hlo"]["flops"]
+    # fused-executor model is the TPU-realistic memory estimate; the
+    # CPU-fusion-granularity figure is kept as an upper bound.
+    mem_dev = art["hlo"].get("mem_bytes_fused") or art["hlo"]["mem_bytes"]
+    coll_dev = art["hlo"]["coll_wire_bytes"]
+    t_c = flops_dev / HW["peak_flops"]
+    t_m = mem_dev / HW["hbm_bw"]
+    t_x = coll_dev / HW["ici_bw"]
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    bound = max(t_c, t_m, t_x)
+    mf = art["model_flops"]
+    ratio = mf / (flops_dev * nd) if flops_dev else 0.0
+    # roofline fraction: useful model flops vs what the bottleneck permits
+    frac = (mf / nd / HW["peak_flops"]) / bound if bound else 0.0
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "memory_upper_s": art["hlo"]["mem_bytes"] / HW["hbm_bw"],
+            "bottleneck": dom, "bound_s": bound,
+            "model_flops_ratio": ratio, "roofline_fraction": frac}
+
+
+MOVE_NOTE = {
+    "compute": "cut non-model FLOPs: remat policy, causal block skipping "
+               "(Pallas flash kernel), head-padding waste",
+    "memory": "fuse / shrink materialized intermediates; larger per-step "
+              "arithmetic intensity (bigger blocks, fused attention)",
+    "collective": "resharding: fewer/smaller collectives, sequence-parallel "
+                  "instead of allreduce, overlap via native backend",
+}
+
+
+def load_artifacts(out_dir: str, mesh: str = "single") -> list[dict]:
+    arts = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            a = json.load(f)
+        if a.get("mesh") == mesh:
+            a["_file"] = os.path.basename(p)
+            arts.append(a)
+    return arts
+
+
+def table(arts: list[dict], fmt: str = "md") -> str:
+    rows = []
+    for a in arts:
+        if a.get("skip"):
+            rows.append({"arch": a["arch"], "shape": a["shape"],
+                         "skip": a["skip"]})
+            continue
+        t = terms(a)
+        rows.append({
+            "arch": a["arch"], "shape": a["shape"],
+            "path": f'{a["path"]}/{a["backend"]}',
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "bottleneck": t["bottleneck"],
+            "mf_ratio": t["model_flops_ratio"],
+            "roofline_frac": t["roofline_fraction"],
+            "hbm_gib": a["memory"]["peak_bytes_est"] / 2 ** 30,
+            "skip": None})
+    if fmt == "csv":
+        hdr = ("arch,shape,path,compute_s,memory_s,collective_s,"
+               "bottleneck,model_flops_ratio,roofline_frac,hbm_gib")
+        lines = [hdr]
+        for r in rows:
+            if r.get("skip"):
+                lines.append(f'{r["arch"]},{r["shape"]},SKIP({r["skip"]})')
+            else:
+                lines.append(
+                    f'{r["arch"]},{r["shape"]},{r["path"]},'
+                    f'{r["compute_s"]:.4e},{r["memory_s"]:.4e},'
+                    f'{r["collective_s"]:.4e},{r["bottleneck"]},'
+                    f'{r["mf_ratio"]:.3f},{r["roofline_frac"]:.3f},'
+                    f'{r["hbm_gib"]:.2f}')
+        return "\n".join(lines)
+    # markdown
+    lines = ["| arch | shape | path | compute s | memory s | collective s |"
+             " bottleneck | 6ND/HLO | roofline frac | HBM GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skip"):
+            lines.append(f'| {r["arch"]} | {r["shape"]} | — | — | — | — | '
+                         f'SKIP: {r["skip"]} | — | — | — |')
+        else:
+            lines.append(
+                f'| {r["arch"]} | {r["shape"]} | {r["path"]} | '
+                f'{r["compute_s"]:.3e} | {r["memory_s"]:.3e} | '
+                f'{r["collective_s"]:.3e} | **{r["bottleneck"]}** | '
+                f'{r["mf_ratio"]:.3f} | {r["roofline_frac"]:.3f} | '
+                f'{r["hbm_gib"]:.2f} |')
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--fmt", choices=["md", "csv"], default="md")
+    args = ap.parse_args(argv)
+    arts = load_artifacts(args.artifacts, args.mesh)
+    print(table(arts, args.fmt))
+    for a in arts:
+        if a.get("skip"):
+            continue
+        t = terms(a)
+        print(f'\n{a["arch"]} x {a["shape"]}: bottleneck={t["bottleneck"]}'
+              f' -> {MOVE_NOTE[t["bottleneck"]]}')
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

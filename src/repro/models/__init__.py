@@ -1,0 +1,4 @@
+from .common import ModelConfig, gqa_layout
+from .model import Model
+
+__all__ = ["ModelConfig", "Model", "gqa_layout"]

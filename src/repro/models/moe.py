@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN with expert parallelism over the `model` axis.
+
+Dispatch is sort-based (MegaBlocks/GShard hybrid): tokens' top-k choices are
+argsorted by expert id, placed into a capacity-bounded (E, C, d) buffer, and
+exchanged with a single ``comm.alltoall`` on the model axis (the paper's
+all-to-all composed from PeerComm primitives on the mpignite path); the
+inverse all-to-all brings expert outputs home, where they are combined with
+the router weights. Overflowed tokens are dropped (their residual passes
+through), standard for capacity-factor routing.
+
+Token-shape contract: ``x`` is (T, d) -- the *local* token slice under the
+mpignite path (sequence-parallel sharding over `model`), the global token set
+under gspmd. ``moe_ffn`` returns (y, aux_loss) with y matching x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..parallel import axes as A
+from ..parallel.ops import Ops, ShardOps
+from .common import ModelConfig
+
+
+def capacity(T: int, k: int, E: int, factor: float) -> int:
+    c = int(T * k / E * factor)
+    return max(A.pad_to(c, 4), 4)
+
+
+def moe_ffn(ops: Ops, p, x, cfg: ModelConfig, tokens_replicated: bool = False):
+    """p: {router:(d,E), wg:(E,d,f), wu:(E,d,f), wd:(E,f,d)}; x: (T, d).
+
+    tokens_replicated=True (decode path): every model shard sees the same
+    tokens; dispatch is computed redundantly, each shard runs only its
+    local expert slice, and a model-axis psum combines -- no all-to-all
+    (a 1-token step cannot be sequence-sharded)."""
+    E, k = cfg.n_experts, cfg.top_k
+    T, d = x.shape
+    C = capacity(T, k, E, cfg.capacity_factor)
+
+    router = ops.weight(p["router"], P(A.DATA_AXIS, None))
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    topv, topi = lax.top_k(probs, k)                           # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_e = topi.reshape(-1)                                  # (T*k,)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e)                                # stable
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < C
+    token_of = order // k
+    src = jnp.take(x, token_of, axis=0)                        # (T*k, d)
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)          # overflow slot
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(src)[:E * C]
+    buf = buf.reshape(E, C, d)
+
+    # ---- expert exchange (paper's alltoall on the model axis) --------------
+    tp = ops.tp
+    e_loc = ops.local_experts(E)
+    shard = isinstance(ops, ShardOps) and tp > 1
+    if shard and tokens_replicated:
+        recv = lax.dynamic_slice_in_dim(buf, ops.tp_index() * e_loc, e_loc,
+                                        axis=0)      # my experts, all tokens
+    elif shard:
+        recv = ops.tp_all_to_all(buf, split_dim=0, concat_dim=1)
+        # (e_loc, tp*C, d): this shard's experts, everyone's tokens
+    else:
+        recv = ops.constrain(buf, P(A.MODEL_AXIS, None, None))
+
+    # ---- expert FFN ---------------------------------------------------------
+    wg = ops.weight(p["wg"], P(A.MODEL_AXIS, A.DATA_AXIS, None))
+    wu = ops.weight(p["wu"], P(A.MODEL_AXIS, A.DATA_AXIS, None))
+    wd = ops.weight(p["wd"], P(A.MODEL_AXIS, None, A.DATA_AXIS))
+    h = jnp.einsum("ecd,edf->ecf", recv, wg)
+    u = jnp.einsum("ecd,edf->ecf", recv, wu)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd)
+    y = ops.constrain(y, P(A.MODEL_AXIS, None, None))
+
+    # ---- return exchange + combine -----------------------------------------
+    if shard and tokens_replicated:
+        # local expert slice only: gather from local slots, psum at the end
+        y = y.reshape(e_loc * C, d)
+        y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], 0)
+        local_slot = slot - ops.tp_index() * e_loc * C
+        in_local = (local_slot >= 0) & (local_slot < e_loc * C) & keep
+        local_slot = jnp.where(in_local, local_slot, e_loc * C)
+        gathered = jnp.take(y, local_slot, axis=0)
+        w_sorted = flat_w[order]
+        contrib = gathered * jnp.where(in_local, w_sorted, 0.0)[:, None] \
+            .astype(y.dtype)
+        out = jnp.zeros((T, d), x.dtype).at[token_of].add(contrib)
+        out = ops.tp_psum(out)
+    else:
+        if shard:
+            y = ops.tp_all_to_all(y, split_dim=1, concat_dim=0)  # (E, C, d)
+        y = y.reshape(E * C, d)
+        y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], 0)  # overflow
+        gathered = jnp.take(y, slot, axis=0)                     # (T*k, d)
+        w_sorted = flat_w[order]
+        contrib = gathered * jnp.where(keep, w_sorted, 0.0)[:, None] \
+            .astype(y.dtype)
+        out = jnp.zeros((T, d), x.dtype).at[token_of].add(contrib)
+
+    # ---- load-balance aux (Switch): E * sum_e f_e * pbar_e ------------------
+    f_e = counts.astype(jnp.float32) / (T * k)
+    pbar = probs.mean(0)
+    aux = E * jnp.sum(f_e * pbar)
+    return out, aux
+
+
+def moe_param_specs(cfg: ModelConfig):
+    """ParamSpecs for one MoE layer's routed experts (to be `stacked`)."""
+    from .common import ParamSpec
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    return {
+        "router": ParamSpec((d, E), P(A.DATA_AXIS, None)),
+        "wg": ParamSpec((E, d, f), P(A.MODEL_AXIS, A.DATA_AXIS, None)),
+        "wu": ParamSpec((E, d, f), P(A.MODEL_AXIS, A.DATA_AXIS, None)),
+        "wd": ParamSpec((E, f, d), P(A.MODEL_AXIS, None, A.DATA_AXIS),
+                        init="scaled", fan_in=cfg.n_layers),
+    }

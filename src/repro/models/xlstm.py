@@ -1,0 +1,270 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) + sequential sLSTM.
+
+TPU adaptation notes (DESIGN.md section Arch-applicability): with only 4
+heads, head-sharding over a 16-way model axis is degenerate, so the xLSTM
+mixers are *replicated* over `model` (FSDP over `data` still applies) -- the
+model axis is idle inside these blocks. The mLSTM uses the same
+chunk-decomposition trick as SSD: intra-chunk work is dense matmuls with a
+log-space stabilized decay matrix; only (C, n, m) state crosses chunks.
+
+mLSTM recurrence (per head): C_t = f_t C_{t-1} + i_t k_t v_t^T,
+n_t = f_t n_{t-1} + i_t k_t, h_t = (q_t C_t) / max(|q_t n_t|, e^{-m_t}),
+with running stabilizer m_t; states are stored pre-scaled by e^{-m_t}.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..parallel import axes as A
+from ..parallel.ops import Ops
+from .common import ModelConfig, ParamSpec
+from .layers import rmsnorm
+
+NEG = -1e30
+
+
+def _headnorm(x, w, eps):
+    """Per-head RMS norm: x (..., H, Dv), w (H*Dv,)."""
+    shp = x.shape
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x.reshape(*shp[:-2], -1) * w).astype(dt).reshape(shp)
+
+
+def mlstm_chunked(q, k, v, ilog, flog, chunk: int, state=None):
+    """q,k,v: (B,S,H,D); ilog/flog: (B,S,H) log input/forget gates.
+    Returns h: (B,S,H,D) and final (C, n, m) state.
+    state: optional (C (B,H,D,D), n (B,H,D), m (B,H)) to resume from."""
+    B, S, H, D = q.shape
+    Q = min(chunk, S)
+    pad = -S % Q
+    S_orig = S
+    if pad:
+        # pad tail with ilog=-inf (no input) and flog=0 (no decay): the
+        # padded steps leave (C, n, m) untouched and emit discarded rows.
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                               [(0, 0)] * (t.ndim - 2))
+        q, k, v, flog = zp(q), zp(k), zp(v), zp(flog)
+        ilog = jnp.pad(ilog, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=NEG)
+        S = S + pad
+    nc = S // Q
+    scale = 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    qc = qf.reshape(B, nc, Q, H, D)
+    kc = kf.reshape(B, nc, Q, H, D)
+    vc = vf.reshape(B, nc, Q, H, D)
+    ic = ilog.astype(jnp.float32).reshape(B, nc, Q, H)
+    fc = flog.astype(jnp.float32).reshape(B, nc, Q, H)
+
+    b = jnp.cumsum(fc, axis=2)                     # (B,nc,Q,H) within-chunk
+    total = b[:, :, -1, :]                         # (B,nc,H)
+
+    # intra-chunk log weights d[q,j] = b_q - b_j + ilog_j   (j <= q)
+    dmat = (b[:, :, :, None, :] - b[:, :, None, :, :]
+            + ic[:, :, None, :, :])                # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, NEG)
+    m_intra = jnp.max(dmat, axis=3)                # (B,nc,Q,H)
+
+    # end-of-chunk state weights g_j = total - b_j + ilog_j
+    g = total[:, :, None, :] - b + ic              # (B,nc,Q,H)
+    g_max = jnp.max(g, axis=2)                     # (B,nc,H)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                            # (B,H,D,D),(B,H,D),(B,H)
+        qk, kk, vk, bk, tot, dk, mi, gk, gm = inp
+        # per-position stabilizer: inter term uses b_q + m_prev
+        m_pos = jnp.maximum(bk + m[:, None, :], mi)        # (B,Q,H)
+        inter_w = jnp.exp(bk + m[:, None, :] - m_pos)      # (B,Q,H)
+        dstab = jnp.exp(dk - m_pos[:, :, None, :])         # (B,Q,Q,H)
+        s = jnp.einsum("bqhd,bjhd->bqjh", qk, kk)          # (B,Q,Q,H)
+        num = jnp.einsum("bqjh,bqjh,bjhd->bqhd", s, dstab, vk)
+        num = num + inter_w[..., None] * jnp.einsum("bqhd,bhde->bqhe", qk, C)
+        den = jnp.einsum("bqjh,bqjh->bqh", s, dstab)
+        den = den + inter_w * jnp.einsum("bqhd,bhd->bqh", qk, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_pos))
+        h = num / den[..., None]                           # (B,Q,H,D)
+        # state update to chunk end
+        m_new = jnp.maximum(tot + m, gm)                   # (B,H)
+        cdec = jnp.exp(tot + m - m_new)
+        gw = jnp.exp(gk - m_new[:, None, :])               # (B,Q,H)
+        C = C * cdec[..., None, None] + jnp.einsum(
+            "bjhd,bjh,bjhe->bhde", kk, gw, vk)
+        n = n * cdec[..., None] + jnp.einsum("bjhd,bjh->bhd", kk, gw)
+        return (C, n, m_new), h
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), 0.0, jnp.float32)
+    else:
+        C0, n0, m0 = state
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), b.transpose(1, 0, 2, 3),
+          total.transpose(1, 0, 2), dmat.transpose(1, 0, 2, 3, 4),
+          m_intra.transpose(1, 0, 2, 3), g.transpose(1, 0, 2, 3),
+          g_max.transpose(1, 0, 2))
+    (C, n, m), hs = lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)[:, :S_orig]
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_decode_step(state, q, k, v, ilog, flog):
+    """One token. q,k,v: (B,H,D); ilog/flog: (B,H). state: (C,n,m)."""
+    C, n, m = state
+    D = q.shape[-1]
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    m_new = jnp.maximum(flog + m, ilog)
+    fdec = jnp.exp(flog + m - m_new)
+    iw = jnp.exp(ilog - m_new)
+    C = C * fdec[..., None, None] + iw[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = n * fdec[..., None] + iw[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))
+    return (num / den[..., None]).astype(q.dtype), (C, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_param_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = int(cfg.proj_factor * d)
+    H = cfg.n_heads
+    K = 4
+    fsdp = lambda *s: ParamSpec(s, P(A.DATA_AXIS, *([None] * (len(s) - 1))))
+    return {
+        "w_up": fsdp(d, 2 * d_in),
+        "conv": ParamSpec((K, d_in), P()),
+        "w_q": fsdp(d_in, d_in),
+        "w_k": fsdp(d_in, d_in),
+        "w_v": fsdp(d_in, d_in),
+        "w_if": fsdp(d_in, 2 * H),
+        "if_bias": ParamSpec((2 * H,), P(), init="zeros"),
+        "gn": ParamSpec((d_in,), P(), init="ones"),
+        "w_down": fsdp(d_in, d),
+    }
+
+
+def mlstm_block(ops: Ops, p, x, cfg: ModelConfig, cache=None,
+                mode: str = "train"):
+    """x: (B,S,d). Returns (y, new_cache). Mixer replicated over model."""
+    from .ssm import _causal_conv, _tail_pad
+    B, S, d = x.shape
+    d_in = int(cfg.proj_factor * d)
+    H = cfg.n_heads
+    D = d_in // H
+    up = x @ ops.weight(p["w_up"], P(A.DATA_AXIS, None))
+    left, right = jnp.split(up, 2, axis=-1)
+    if mode == "decode":
+        lc, conv_cache = _causal_conv(left, p["conv"], cache["conv"])
+    else:
+        lc = _causal_conv(left, p["conv"])
+        conv_cache = _tail_pad(left, p["conv"].shape[0] - 1)
+    lc = jax.nn.silu(lc)
+    q = (lc @ ops.weight(p["w_q"], P(A.DATA_AXIS, None))).reshape(B, S, H, D)
+    k = (lc @ ops.weight(p["w_k"], P(A.DATA_AXIS, None))).reshape(B, S, H, D)
+    v = (left @ ops.weight(p["w_v"], P(A.DATA_AXIS, None))).reshape(B, S, H, D)
+    gates = lc @ ops.weight(p["w_if"], P(A.DATA_AXIS, None)) + p["if_bias"]
+    ilog, flog = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    flog = jax.nn.log_sigmoid(flog)
+    if mode == "decode":
+        h_t, st = mlstm_decode_step(
+            (cache["C"], cache["n"], cache["m"]),
+            q[:, 0], k[:, 0], v[:, 0], ilog[:, 0], flog[:, 0])
+        h = h_t[:, None]
+        new_cache = {"conv": conv_cache, "C": st[0], "n": st[1], "m": st[2]}
+    else:
+        h, st = mlstm_chunked(q, k, v, ilog, flog, chunk=cfg.ssm_chunk or 64)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": conv_cache, "C": st[0], "n": st[1],
+                         "m": st[2]}
+    h = _headnorm(h, p["gn"], cfg.norm_eps)
+    h = h.reshape(B, S, d_in) * jax.nn.silu(right)
+    return h @ ops.weight(p["w_down"], P(A.DATA_AXIS, None)), new_cache
+
+
+def slstm_param_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    fsdp = lambda *s: ParamSpec(s, P(A.DATA_AXIS, *([None] * (len(s) - 1))))
+    return {
+        "w": fsdp(d, 4 * d),
+        "r": ParamSpec((H, dh, 4 * dh), P()),
+        "bias": ParamSpec((4 * d,), P(), init="zeros"),
+        "gn": ParamSpec((d,), P(), init="ones"),
+    }
+
+
+def slstm_block(ops: Ops, p, x, cfg: ModelConfig, cache=None,
+                mode: str = "train"):
+    """Sequential sLSTM. x: (B,S,d). cache: (c,n,h,m) each (B,H,dh)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    w = ops.weight(p["w"], P(A.DATA_AXIS, None))
+    pre_all = x @ w + p["bias"]                       # (B,S,4d)
+    r = p["r"]                                        # (H, dh, 4dh)
+
+    def cell(carry, pre_t):
+        c, n, h, m = carry                            # (B,H,dh) x3, (B,H)
+        rec = jnp.einsum("bhd,hde->bhe", h, r)        # (B,H,4dh)
+        z = pre_t.reshape(B, H, 4 * dh) + rec
+        zi, zf, zz, zo = jnp.split(z.astype(jnp.float32), 4, axis=-1)
+        ilog = jnp.mean(zi, -1)                       # scalar gates per head
+        flog = jax.nn.log_sigmoid(jnp.mean(zf, -1))
+        m_new = jnp.maximum(flog + m, ilog)
+        c = c * jnp.exp(flog + m - m_new)[..., None] + \
+            jnp.exp(ilog - m_new)[..., None] * jnp.tanh(zz)
+        n = n * jnp.exp(flog + m - m_new)[..., None] + \
+            jnp.exp(ilog - m_new)[..., None]
+        h_new = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    if mode == "decode":
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        c0 = jnp.zeros((B, H, dh), jnp.float32)
+        carry = (c0, c0, jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.zeros((B, H), jnp.float32))
+    carry, hs = lax.scan(cell, carry, pre_all.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(y, p["gn"], cfg.norm_eps)
+    new_cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y, (new_cache if mode != "train" else None)
+
+
+def mlstm_cache_specs(cfg: ModelConfig, batch: int, bspec=A.DATA_AXIS):
+    d_in = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    D = d_in // H
+    z = lambda *s: ParamSpec(s, P(bspec, *([None] * (len(s) - 1))),
+                             init="zeros", dtype=jnp.float32)
+    zb = lambda *s: ParamSpec(s, P(bspec, *([None] * (len(s) - 1))),
+                              init="zeros")
+    return {"conv": zb(batch, 3, d_in), "C": z(batch, H, D, D),
+            "n": z(batch, H, D), "m": z(batch, H)}
+
+
+def slstm_cache_specs(cfg: ModelConfig, batch: int, bspec=A.DATA_AXIS):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = lambda *s: ParamSpec(s, P(bspec, *([None] * (len(s) - 1))),
+                             init="zeros", dtype=jnp.float32)
+    return {"c": z(batch, H, dh), "n": z(batch, H, dh),
+            "h": z(batch, H, dh), "m": z(batch, H)}

@@ -1,0 +1,5 @@
+from . import axes
+from .ops import GlobalOps, Ops, ParallelConfig, ShardOps, make_ops
+
+__all__ = ["axes", "GlobalOps", "Ops", "ParallelConfig", "ShardOps",
+           "make_ops"]

@@ -1,0 +1,77 @@
+"""GPipe-style pipeline parallelism on PeerComm.shift (paper's ring p2p).
+
+Each mesh device along the ``pipe`` axis owns one contiguous stage of
+layers; microbatches flow through the ring with one `comm.shift`
+(= `lax.ppermute`, ICI collective-permute) per tick. The classic SPMD
+formulation: T = M + S - 1 ticks, device s computes microbatch (t - s)
+at tick t; bubbles are masked compute. Backward falls out of autodiff —
+the transpose of `shift(+1)` is `shift(-1)`, so `jax.grad` through the
+loop *is* the backward pipeline schedule.
+
+This realizes the PP row of DESIGN.md section 3 with the same primitive
+the paper's ring listing uses (Listing 2), scaled from a token to
+activation tensors.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.comm import PeerComm, cost_scope
+
+
+def gpipe(comm: PeerComm, stage_fn: Callable, stage_params, mbs,
+          n_stages: int):
+    """Run ``stage_fn(stage_params, x)`` as a pipeline.
+
+    comm        : PeerComm over the `pipe` axis (size == n_stages).
+    stage_fn    : (params_of_this_stage, x) -> y, shape-preserving.
+    stage_params: this device's stage parameters (already sharded by the
+                  caller via shard_map in_specs).
+    mbs         : (M, ...) microbatch inputs, replicated on every stage
+                  (only stage 0 reads them).
+    Returns (M, ...) outputs, valid on the *last* stage (zeros elsewhere);
+    callers typically follow with a broadcast or compute loss in place.
+    """
+    M = mbs.shape[0]
+    rank = comm.rank()
+    ticks = M + n_stages - 1
+    state = jnp.zeros_like(mbs[0])
+    outs = jnp.zeros_like(mbs)
+
+    def tick(carry, t):
+        state, outs = carry
+        # stage 0 injects microbatch t (when one is due); other stages
+        # consume what arrived from the previous stage last tick.
+        inj = lax.dynamic_index_in_dim(mbs, jnp.clip(t, 0, M - 1), 0,
+                                       keepdims=False)
+        x = jnp.where(rank == 0, jnp.where(t < M, inj, jnp.zeros_like(inj)),
+                      state)
+        y = stage_fn(stage_params, x)
+        # last stage banks microbatch (t - (S-1)) when valid
+        out_idx = jnp.clip(t - (n_stages - 1), 0, M - 1)
+        bank = (rank == n_stages - 1) & (t >= n_stages - 1)
+        outs = lax.cond(
+            bank,
+            lambda o: lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+            lambda o: o, outs)
+        # rotate activations to the next stage
+        state = comm.shift(y, 1)
+        return (state, outs), None
+
+    with cost_scope(ticks):
+        (_, outs), _ = lax.scan(tick, (state, outs), jnp.arange(ticks))
+    return outs
+
+
+def stack_stages(layer_params, n_stages: int):
+    """(L, ...) stacked layer params -> (S, L/S, ...) stage-major view
+    for sharding the leading dim over the `pipe` axis."""
+    def leaf(p):
+        L = p.shape[0]
+        assert L % n_stages == 0, "layers must divide stages"
+        return p.reshape((n_stages, L // n_stages) + p.shape[1:])
+    return jax.tree.map(leaf, layer_params)

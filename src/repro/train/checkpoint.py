@@ -1,0 +1,173 @@
+"""Sharded checkpointing with elastic re-mesh restore.
+
+Layout: ``<dir>/step_<N>/`` containing one ``.npy`` per pytree leaf
+(global arrays; on a real multi-host deployment each host writes its
+addressable shards -- single-process here, noted in DESIGN.md) plus
+``manifest.json`` (step, leaf paths/shapes/dtypes, user metadata).
+Writes are atomic (tmp dir + rename); a retention policy prunes old
+steps; ``AsyncCheckpointer`` moves serialization off the step loop.
+
+Elastic re-mesh: arrays are stored with *global* shapes, so restore can
+target any mesh -- ``restore_sharded`` re-slices via device_put with the
+new NamedShardings (the paper's fault-recovery story: recompute/reload,
+then resume peer-to-peer).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+SEP = "/"
+
+# numpy round-trips ml_dtypes arrays as raw void; serialize via a
+# same-width integer view and restore from the manifest's logical dtype.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8, "float16": None}
+
+
+def _to_disk(arr: np.ndarray) -> np.ndarray:
+    v = _VIEW_AS.get(arr.dtype.name)
+    return arr.view(v) if v is not None else arr
+
+
+def _from_disk(arr: np.ndarray, logical: str) -> np.ndarray:
+    if _VIEW_AS.get(logical) is not None:
+        return arr.view(getattr(ml_dtypes, logical))
+    return arr
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, state: dict, meta: dict | None = None,
+         keep: int = 3) -> str:
+    """state: arbitrary pytree dict (e.g. {params, opt}). Returns path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace(SEP, "__") + ".npy"
+        np.save(os.path.join(tmp, fname), _to_disk(arr))
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": arr.dtype.name}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load(ckpt_dir: str, step: int | None = None) -> tuple[dict, dict, int]:
+    """Returns (flat_leaves {key: np.ndarray}, meta, step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {k: _from_disk(np.load(os.path.join(path, v["file"])),
+                          v["dtype"])
+            for k, v in manifest["leaves"].items()}
+    return flat, manifest["meta"], step
+
+
+def restore_tree(template, flat: dict[str, Any]):
+    """Rebuild a pytree shaped like ``template`` from flat leaves."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tleaf in paths:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(tleaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {tleaf.shape} (elastic restore "
+                             "requires identical global shapes)")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_sharded(template, flat, mesh, pspecs):
+    """Elastic re-mesh restore: place global arrays onto ``mesh`` with
+    ``pspecs`` (which may describe a different topology than at save)."""
+    from jax.sharding import NamedSharding
+    tree = restore_tree(template, flat)
+    return jax.tree.map(
+        lambda arr, tleaf, spec: jax.device_put(
+            np.asarray(arr).astype(tleaf.dtype),
+            NamedSharding(mesh, spec)),
+        tree, template, pspecs)
+
+
+class AsyncCheckpointer:
+    """Serialize checkpoints on a background thread (bounded queue;
+    blocks the step loop only when more than one save is in flight)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.q: queue.Queue = queue.Queue(maxsize=1)
+        self.errors: list[Exception] = []
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            step, state, meta = item
+            try:
+                save(self.ckpt_dir, step, state, meta, keep=self.keep)
+            except Exception as e:  # noqa: BLE001
+                self.errors.append(e)
+
+    def submit(self, step: int, state, meta=None):
+        # device_get now so donated buffers aren't freed under us
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        self.q.put((step, host_state, meta))
+
+    def finish(self):
+        self.q.put(None)
+        self._thread.join()
+        if self.errors:
+            raise self.errors[0]

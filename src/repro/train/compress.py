@@ -1,0 +1,43 @@
+"""Int8 gradient compression with error feedback for cross-pod sync.
+
+Cross-pod links are the scarcest bandwidth in a multi-pod mesh; the
+pod-axis gradient allreduce is compressed 4x (bf16 -> int8 + one fp32
+scale) using the classic EF-SGD scheme (Seide et al. 2014; Karimireddy
+et al., arXiv:1901.09847): the quantization residual is carried to the
+next step so the compression error telescopes instead of accumulating.
+
+The exchange itself is an ``allgather`` of int8 payloads composed from
+PeerComm primitives -- on the `linear` backend this byte-for-byte
+reproduces the paper's phase-1 master relay, compressed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.comm import PeerComm
+
+
+def quantize_int8(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def pod_allreduce_int8(comm: PeerComm, g, ef=None):
+    """Sum-allreduce g over the pod axis in int8. Returns (g_sum, ef_new).
+    ``ef`` is this leaf's error-feedback residual (same shape, f32)."""
+    gf = g.astype(jnp.float32)
+    if ef is not None:
+        gf = gf + ef
+    q, scale = quantize_int8(gf)
+    sent = q.astype(jnp.float32) * scale
+    ef_new = gf - sent                       # residual stays local
+    qs = comm.allgather(q, axis=0)           # (P, ...) int8 on the wire
+    ss = comm.allgather(scale, axis=0)       # (P,) f32
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=1)
+    return total.astype(g.dtype), ef_new
+
+
+def ef_zeros_like(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

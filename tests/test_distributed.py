@@ -1,0 +1,21 @@
+"""Drives the multi-device checks in a subprocess: the forced 8-device
+XLA flag must not leak into this pytest process (smoke tests and benches
+are required to see exactly 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_distributed_checks_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "_dist_checks.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, timeout=850, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in r.stdout

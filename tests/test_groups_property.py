@@ -1,0 +1,116 @@
+"""Property tests (hypothesis) for the pure rank/group machinery --
+the invariants every comm backend builds on."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import groups as G
+
+
+sizes = st.integers(min_value=1, max_value=64)
+
+
+@given(size=sizes)
+def test_world_groups_partition(size):
+    G.validate_groups(G.world_groups(size), size)
+
+
+@given(size=st.integers(2, 48), data=st.data())
+def test_split_partitions_and_orders(size, data):
+    """MPI_Comm_split: every rank lands in exactly one color group,
+    ordered by (key, parent rank)."""
+    colors = data.draw(st.lists(st.integers(0, 3), min_size=size,
+                                max_size=size))
+    keys = data.draw(st.lists(st.integers(-5, 5), min_size=size,
+                              max_size=size))
+    per_color = G.split_groups(G.world_groups(size), colors, keys)
+    seen = []
+    for color, groups in per_color.items():
+        for g in groups:
+            seen.extend(g)
+            # ordering invariant within the group
+            ks = [(keys[r], r) for r in g]
+            assert ks == sorted(ks)
+            for r in g:
+                assert colors[r] == color
+    assert sorted(seen) == list(range(size))
+
+
+@given(size=st.integers(1, 64), shift=st.integers(-64, 64),
+       ngroups=st.integers(1, 4))
+def test_ring_perm_is_permutation(size, shift, ngroups):
+    if size % ngroups:
+        ngroups = 1
+    per = size // ngroups
+    groups = tuple(tuple(range(i * per, (i + 1) * per))
+                   for i in range(ngroups))
+    pairs = G.ring_perm(groups, shift)
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    assert sorted(srcs) == list(range(size))
+    assert sorted(dsts) == list(range(size))
+    # shift composition: shifting by k then by -k is identity
+    fwd = dict(pairs)
+    back = dict(G.ring_perm(groups, -shift))
+    assert all(back[fwd[r]] == r for r in range(size))
+
+
+@given(size=st.integers(2, 32))
+def test_comm_rank_table_roundtrip(size):
+    groups = G.world_groups(size)
+    table = G.comm_rank_table(groups, size)
+    assert table == list(range(size))
+    # two groups
+    if size % 2 == 0:
+        half = size // 2
+        g2 = (tuple(range(half)), tuple(range(half, size)))
+        t2 = G.comm_rank_table(g2, size)
+        assert t2 == list(range(half)) * 2
+        gid = G.group_id_table(g2, size)
+        assert gid == [0] * half + [1] * half
+
+
+@given(size=st.integers(2, 32), data=st.data())
+def test_context_id_isolates_split_lineages(size, data):
+    colors = data.draw(st.lists(st.integers(0, 1), min_size=size,
+                                max_size=size))
+    if len(set(colors)) < 2:
+        colors = [i % 2 for i in range(size)]
+    per = G.split_groups(G.world_groups(size), colors,
+                         list(range(size)))
+    ids = {c: G.context_id(g, 0) for c, g in per.items()}
+    assert len(set(ids.values())) == len(ids)
+    assert all(i != 0 for i in ids.values())   # 0 is the world context
+
+
+def test_p2p_perm_rejects_cross_group_and_duplicates():
+    groups = ((0, 1), (2, 3))
+    # valid: comm-rank pair (0 -> 1) realized inside both groups
+    pairs = G.p2p_perm(groups, [(0, 1)], 4)
+    assert sorted(pairs) == [(0, 1), (2, 3)]
+    with pytest.raises(ValueError):
+        G.p2p_perm(groups, [(0, 2)], 4)      # comm rank out of range
+    with pytest.raises(ValueError):
+        G.p2p_perm(groups, [(0, 1), (0, 0)], 4)  # duplicate sender
+
+
+@given(nbytes=st.integers(0, 10 ** 9), p=st.integers(1, 512),
+       op=st.sampled_from(["allreduce", "broadcast", "allgather",
+                           "reducescatter", "alltoall", "p2p"]),
+       backend=st.sampled_from(["linear", "ring", "native"]))
+def test_collective_cost_model_sane(nbytes, p, op, backend):
+    c = G.collective_cost(op, backend, nbytes, p)
+    assert c.bytes_per_device >= 0 and c.steps >= 0
+    if p == 1:
+        assert c.bytes_per_device == 0
+    if p > 2 and nbytes > 0 and op == "allreduce":
+        lin = G.collective_cost(op, "linear", nbytes, p)
+        ring = G.collective_cost(op, "ring", nbytes, p)
+        # phase-1 master relay moves ~p/2 x more bytes than the ring
+        assert lin.bytes_per_device > ring.bytes_per_device
+
+
+@given(n=st.integers(0, 10 ** 6), p=st.integers(1, 512))
+def test_pad_to_multiple(n, p):
+    m = G.pad_to_multiple(n, p)
+    assert m % p == 0 and 0 <= m - n < p

@@ -1,0 +1,111 @@
+"""The trip-count-aware HLO parser: dot FLOPs, while multipliers, fusion
+memory model and collective byte parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.launch import hlo_analysis as H
+
+
+def compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    s = H.summarize(compile_text(f, a, b), 1)
+    want = 2 * 64 * 128 * 32
+    assert abs(s.flops - want) / want < 0.05, (s.flops, want)
+
+
+def test_while_trip_count_multiplies():
+    def f(x):
+        y, _ = lax.scan(lambda c, _: (jnp.tanh(c @ c), None), x, None,
+                        length=17)
+        return y.sum()
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    s = H.summarize(compile_text(f, x), 1)
+    one_dot = 2 * 64 * 64 * 64
+    assert s.flops > 17 * one_dot * 0.95
+    assert s.flops < 17 * one_dot * 1.3   # + tanh elementwise
+
+
+def test_grad_scan_counts_both_loops():
+    def f(x):
+        y, _ = lax.scan(lambda c, _: (jnp.tanh(c @ c), None), x, None,
+                        length=10)
+        return y.sum()
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    s = H.summarize(compile_text(jax.grad(f), x), 1)
+    one_dot = 2 * 32 * 32 * 32
+    # fwd: 10 dots; bwd: 2 dots per step = 30 total
+    assert s.flops > 28 * one_dot, s.flops / one_dot
+
+
+def test_scan_memory_not_inflated_by_stacked_buffers():
+    """The scan body reads one (64,64) slice of the stacked (40,64,64)
+    weights per iteration -- memory must scale with slices, not buffers."""
+    def f(ws, x):
+        y, _ = lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y.sum()
+    ws = jax.ShapeDtypeStruct((40, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    s = H.summarize(compile_text(f, ws, x), 1, norm_float_bytes=0)
+    per_iter = 3 * 64 * 64 * 4          # w slice + x in + x out
+    assert s.mem_bytes < 40 * per_iter * 6, \
+        f"{s.mem_bytes} vs {40 * per_iter}"
+
+
+def test_bf16_normalization():
+    def f(a, b):
+        return (a @ b).sum()
+    a32 = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    b32 = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    txt = compile_text(f, a32, b32)
+    full = H.summarize(txt, 1, norm_float_bytes=0)
+    norm = H.summarize(txt, 1, norm_float_bytes=2)
+    assert 0.45 < norm.mem_bytes / full.mem_bytes < 0.55
+
+
+SYNTH = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body.1 (arg: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %arg = (s32[], f32[128,256]) parameter(0)
+  %gte = f32[128,256] get-tuple-element(%arg), index=1
+  %ar = f32[128,256] all-reduce(%gte), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %cp = f32[128,256] collective-permute(%ar), source_target_pairs={{0,1},{1,0}}
+}
+
+ENTRY %main.1 (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256] parameter(0)
+  %t = (s32[], f32[128,256]) tuple(%p0)
+  %w = (s32[], f32[128,256]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = f32[512,256] all-gather(%p0), replica_groups=[2,4]<=[8], dimensions={0}
+}
+"""
+
+
+def test_collective_parsing_synthetic():
+    s = H.summarize(SYNTH, 8, norm_float_bytes=0)
+    nb = 128 * 256 * 4
+    # all-reduce in a 12-trip loop over groups of 4: 2*S*(3/4) each
+    want_ar = 12 * 2 * nb * 3 / 4
+    want_cp = 12 * nb
+    want_ag = (512 * 256 * 4) * 3 / 4
+    assert abs(s.coll_bytes["all-reduce"] - want_ar) < 1
+    assert abs(s.coll_bytes["collective-permute"] - want_cp) < 1
+    assert abs(s.coll_bytes["all-gather"] - want_ag) < 1
+    assert s.coll_count["all-reduce"] == 12
+
+
+def test_schedule_lists_collectives():
+    sched = H.collective_schedule(SYNTH, 8, norm_float_bytes=0)
+    ops = sorted(r["op"] for r in sched)
+    assert ops == ["all-gather", "all-reduce", "collective-permute"]
+    ar = [r for r in sched if r["op"] == "all-reduce"][0]
+    assert ar["times"] == 12 and ar["group"] == 4

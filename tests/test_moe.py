@@ -1,0 +1,81 @@
+"""MoE dispatch invariants (single device) + capacity behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe as MOE
+from repro.models.model import Model
+from repro.parallel import axes as A
+from repro.parallel.ops import ParallelConfig, make_ops
+
+AXES1 = A.MeshAxes(1, 1, 1)
+PCFG = ParallelConfig(sequence_parallel=False, remat="none")
+KEY = jax.random.PRNGKey(0)
+
+
+def setup(T=64, d=32, E=8, k=2, cf=8.0):
+    cfg = dataclasses.replace(
+        get_config("deepseek-moe-16b", smoke=True),
+        d_model=d, n_experts=E, top_k=k, moe_d_ff=16,
+        capacity_factor=cf, dtype=jnp.float32)
+    specs = MOE.moe_param_specs(cfg)
+    from repro.models.common import tree_instantiate
+    p = tree_instantiate(specs, KEY, 0.02, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (T, d), jnp.float32)
+    return cfg, p, x
+
+
+def test_moe_aux_loss_bounds():
+    cfg, p, x = setup()
+    ops = make_ops(AXES1, PCFG)
+    _, aux = MOE.moe_ffn(ops, p, x, cfg)
+    # switch aux is ~1.0 at perfect balance, <= E at total collapse
+    assert 0.9 < float(aux) <= cfg.n_experts
+
+
+def test_moe_no_drops_at_high_capacity_matches_dense_gate():
+    """With capacity >= T*k no token is dropped: output equals the dense
+    per-token mixture computed directly."""
+    cfg, p, x = setup(cf=16.0)
+    ops = make_ops(AXES1, PCFG)
+    out, _ = MOE.moe_ffn(ops, p, x, cfg)
+
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / topv.sum(-1, keepdims=True)
+    want = np.zeros_like(np.asarray(x))
+    for t in range(x.shape[0]):
+        acc = 0
+        for j in range(cfg.top_k):
+            e = int(topi[t, j])
+            h = jax.nn.silu(x[t] @ p["wg"][e]) * (x[t] @ p["wu"][e])
+            acc = acc + float(topv[t, j]) * np.asarray(h @ p["wd"][e])
+        want[t] = acc
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg, p, x = setup(cf=0.25)
+    ops = make_ops(AXES1, PCFG)
+    out, _ = MOE.moe_ffn(ops, p, x, cfg)
+    # some tokens must be zero (dropped entirely)
+    norms = np.linalg.norm(np.asarray(out), axis=-1)
+    assert (norms < 1e-12).any()
+
+
+def test_moe_deterministic():
+    cfg, p, x = setup()
+    ops = make_ops(AXES1, PCFG)
+    a, _ = MOE.moe_ffn(ops, p, x, cfg)
+    b, _ = MOE.moe_ffn(ops, p, x, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_capacity_helper():
+    assert MOE.capacity(4096, 6, 64, 1.25) % 4 == 0
+    assert MOE.capacity(1, 1, 64, 1.0) == 4   # floor

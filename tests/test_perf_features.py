@@ -1,0 +1,125 @@
+"""The section-Perf levers: correctness of microbatching, ZeRO++-style
+int8 weight gathers, lean Adafactor, and the serving (fsdp=False) layout."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.parallel import axes as A
+from repro.parallel.ops import ParallelConfig, make_ops
+from repro.train.optim import OptConfig, Optimizer
+
+AXES1 = A.MeshAxes(1, 1, 1)
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(pcfg, dtype=jnp.float32):
+    cfg = dataclasses.replace(get_config("stablelm-3b", smoke=True),
+                              dtype=dtype)
+    model = Model(cfg, AXES1, pcfg)
+    params = model.init(KEY, dtype=dtype)
+    batch = {"tokens": np.asarray(
+        jax.random.randint(KEY, (4, 32), 0, cfg.vocab))}
+    return cfg, model, params, batch
+
+
+def test_microbatch_grads_match_full_batch():
+    """mb=4 accumulated grads == single-batch grads (linearity of the
+    mean over equal-sized microbatches)."""
+    pcfg = ParallelConfig(sequence_parallel=False, remat="none")
+    cfg, model, params, batch = _setup(pcfg)
+    ops = make_ops(AXES1, pcfg)
+
+    def gfull(p):
+        return jax.grad(lambda q: model.loss(ops, q, batch)[0])(p)
+
+    m = 4
+    mb = {"tokens": batch["tokens"].reshape(m, 1, 32)}
+
+    def gacc(p):
+        def one(i):
+            b = {"tokens": mb["tokens"][i]}
+            return jax.grad(lambda q: model.loss(ops, q, b)[0])(p)
+        acc = jax.tree.map(jnp.zeros_like, p)
+        for i in range(m):
+            acc = jax.tree.map(lambda a, g: a + g / m, acc, one(i))
+        return acc
+
+    ga, gb = gfull(params), gacc(params)
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-3)
+
+
+def test_lean_adafactor_state_has_no_master():
+    opt = Optimizer(OptConfig(name="adafactor", master=False, lr_peak=0.05,
+                              warmup_steps=1, total_steps=100,
+                              weight_decay=0.0))
+    params = {"w": jnp.full((8, 16), 2.0, jnp.bfloat16)}
+    state = opt.init(params)
+    assert "master" not in state
+    ps = opt.state_pspecs_from(
+        {"w": __import__("repro.models.common", fromlist=["ParamSpec"])
+         .ParamSpec((8, 16), P())})
+    assert "master" not in ps
+
+    def loss_fn(p):
+        return jnp.sum(p["w"].astype(jnp.float32) ** 2)
+    l0 = float(loss_fn(params))
+    for _ in range(40):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss_fn(params)) < 0.5 * l0
+
+
+def test_quantized_gather_error_and_exact_bwd():
+    """int8 qwZ gather: forward RMS error < 1%, backward == exact
+    reduce-scatter (tested at data=1 where gather is identity-shaped,
+    via the custom_vjp wiring on a fake 4-way comm in a subprocessless
+    single-axis world is not expressible; here we check the quantizer
+    round-trip error bound that the gather inherits)."""
+    from repro.train.compress import quantize_int8
+    w = jax.random.normal(KEY, (256, 128), jnp.float32) * 0.02
+    q, s = quantize_int8(w)
+    deq = q.astype(jnp.float32) * s
+    rel = float(jnp.linalg.norm(deq - w) / jnp.linalg.norm(w))
+    assert rel < 0.01, rel
+
+
+def test_serving_layout_strips_data_axis():
+    pcfg = ParallelConfig(sequence_parallel=False, remat="none",
+                          fsdp=False)
+    axes = A.MeshAxes(data=4, model=2, pod=1)
+    cfg = get_config("qwen3-4b", smoke=True)
+    model = Model(cfg, axes, pcfg)
+    for spec in jax.tree.leaves(
+            model.pspecs, is_leaf=lambda s: isinstance(s, P)):
+        flat = [n for e in spec if e is not None
+                for n in (e if isinstance(e, tuple) else (e,))]
+        assert A.DATA_AXIS not in flat, spec
+    # fsdp=True keeps it
+    model2 = Model(cfg, axes, pcfg.replace(fsdp=True))
+    found = any(
+        A.DATA_AXIS in [n for e in spec if e is not None
+                        for n in (e if isinstance(e, tuple) else (e,))]
+        for spec in jax.tree.leaves(
+            model2.pspecs, is_leaf=lambda s: isinstance(s, P)))
+    assert found
+
+
+def test_decode_grouped_attention_matches_repeat():
+    """The no-repeat GQA decode einsum equals explicit KV repetition."""
+    from repro.models.attention import attn_decode
+    B, S, Hq, Hkv, D = 2, 64, 8, 2, 32
+    q = jax.random.normal(KEY, (B, 1, Hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, Hkv, D))
+    kv_len = jnp.asarray([40, 64])
+    out = attn_decode(q, k, v, kv_len=kv_len)
+    out_rep = attn_decode(q, jnp.repeat(k, 4, 2), jnp.repeat(v, 4, 2),
+                          kv_len=kv_len)
+    np.testing.assert_allclose(out, out_rep, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,43 @@
+"""Roofline term derivation + artifact plumbing."""
+import json
+
+import pytest
+
+from repro.launch.roofline import HW, MOVE_NOTE, table, terms
+
+
+ART = {
+    "arch": "x", "shape": "train_4k", "path": "mpignite",
+    "backend": "native", "mesh": "single", "skip": None,
+    "n_devices": 256,
+    "model_flops": 6.0 * 2.7e9 * 1.05e6,
+    "hlo": {"flops": 1.0e14, "mem_bytes": 3.0e12,
+            "mem_bytes_fused": 1.0e12, "coll_wire_bytes": 1.0e11,
+            "coll_bytes": {}, "coll_count": {}},
+    "memory": {"peak_bytes_est": 12 * 2 ** 30, "argument_bytes": 0,
+               "output_bytes": 0, "temp_bytes": 0, "alias_bytes": 0},
+}
+
+
+def test_terms_math():
+    t = terms(ART)
+    assert t["compute_s"] == pytest.approx(1.0e14 / HW["peak_flops"])
+    assert t["memory_s"] == pytest.approx(1.0e12 / HW["hbm_bw"])
+    assert t["collective_s"] == pytest.approx(1.0e11 / HW["ici_bw"])
+    assert t["bottleneck"] == "collective"
+    assert t["memory_upper_s"] == pytest.approx(3.0e12 / HW["hbm_bw"])
+    # ratio: model flops over total HLO flops across chips
+    assert t["model_flops_ratio"] == pytest.approx(
+        ART["model_flops"] / (1.0e14 * 256))
+    # fraction: ideal time over bound time
+    ideal = ART["model_flops"] / 256 / HW["peak_flops"]
+    assert t["roofline_fraction"] == pytest.approx(ideal / t["collective_s"])
+    assert t["bottleneck"] in MOVE_NOTE
+
+
+def test_table_renders_md_and_csv():
+    md = table([ART, {"arch": "y", "shape": "s", "skip": "because"}])
+    assert "collective" in md and "SKIP: because" in md
+    csv = table([ART], fmt="csv")
+    assert csv.splitlines()[0].startswith("arch,shape")
+    assert "collective" in csv
