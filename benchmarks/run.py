@@ -36,20 +36,27 @@ def bench(name: str, fn, *, repeat: int = 5, derived: str = ""):
 
 
 # ---------------------------------------------------------------------------
-# Listings 1/2/4 on the LocalComm runtime (paper local mode)
+# Listings 1/2/4 on both runtime deployments: threads (paper local mode)
+# and real executor processes over the TCP transport (cluster mode).
+# Cluster rows include process spawn + connect, i.e. full job dispatch cost.
 # ---------------------------------------------------------------------------
+
+RUNTIME_MODES = ("local", "cluster")
+
 
 def bench_listing1_matvec():
     from repro.core import parallelize_func
     mat = np.arange(1, 65, dtype=np.int64).reshape(8, 8)
     vec = np.arange(8)
 
-    def run():
-        out = parallelize_func(
-            lambda w: int(mat[w.get_rank()] @ vec)
-            if w.get_rank() < 8 else 0).execute(8)
-        assert sum(out) == int(mat @ vec @ np.ones(8))
-    bench("listing1_matvec_local_n8", run)
+    for mode in RUNTIME_MODES:
+        def run(mode=mode):
+            out = parallelize_func(
+                lambda w: int(mat[w.get_rank()] @ vec)
+                if w.get_rank() < 8 else 0).execute(8, mode=mode)
+            assert sum(out) == int(mat @ vec @ np.ones(8))
+        bench(f"listing1_matvec_{mode}_n8", run, repeat=3,
+              derived="incl. process spawn" if mode == "cluster" else "")
 
 
 def bench_listing2_ring(n=16):
@@ -64,10 +71,12 @@ def bench_listing2_ring(n=16):
         world.send((rank + 1) % size, 0, t)
         return t
 
-    def run():
-        assert parallelize_func(ring).execute(n)[0] == 42
-    bench(f"listing2_ring_local_n{n}", run,
-          derived=f"{n} hops/round")
+    for mode in RUNTIME_MODES:
+        def run(mode=mode):
+            assert parallelize_func(ring).execute(n, mode=mode)[0] == 42
+        bench(f"listing2_ring_{mode}_n{n}", run, repeat=3,
+              derived=f"{n} hops/round" + (
+                  " incl. process spawn" if mode == "cluster" else ""))
 
 
 def bench_listing4_2d_matvec():
@@ -84,10 +93,12 @@ def bench_listing4_2d_matvec():
         return row.allreduce(int(mat[wr // n, wr % n]) * x,
                              lambda a, b: a + b)
 
-    def run():
-        out = parallelize_func(matvec2d).execute(9)
-        assert out[0] == int(mat[0] @ vec)
-    bench("listing4_2d_matvec_local_n9", run)
+    for mode in RUNTIME_MODES:
+        def run(mode=mode):
+            out = parallelize_func(matvec2d).execute(9, mode=mode)
+            assert out[0] == int(mat[0] @ vec)
+        bench(f"listing4_2d_matvec_{mode}_n9", run, repeat=3,
+              derived="incl. process spawn" if mode == "cluster" else "")
 
 
 def bench_figure1_api_parity():

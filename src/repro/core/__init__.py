@@ -1,19 +1,28 @@
 """MPIgnite-JAX core: the paper's contribution as a composable JAX module.
 
 - ``groups``    : pure rank/group math (split, rings, byte-cost model)
+- ``matching``  : transport-agnostic mailbox matching + p2p-composed
+                  collectives (``MessageComm`` base)
 - ``local``     : thread-runtime communicator (paper's local mode; oracle)
+- ``cluster``   : multi-process peer runtime over TCP (wire protocol,
+                  heartbeats, checkpoint-restart supervision)
 - ``comm``      : SPMD ``PeerComm`` over mesh axes (linear/ring/native)
-- ``closures``  : ``parallelize_func(f).execute(n)`` in local or SPMD mode
+- ``closures``  : ``parallelize_func(f).execute(n)`` in local, cluster or
+                  SPMD mode
+- ``compat``    : shims over jax version differences (shard_map, set_mesh)
 """
-from . import groups
+from . import compat, groups
 from .comm import PeerComm, cost_log, cost_scope
 from .closures import (MPIgniteContext, ParallelClosure, RANK_AXIS, flat_mesh,
                        parallelize_func)
+from .cluster import ClusterComm, ClusterFuncRDD, ExecutorFailure
 from .local import LocalComm, ParallelFuncRDD
+from .matching import Mailbox, MessageComm
 
 __all__ = [
-    "groups", "PeerComm", "cost_log", "cost_scope", "MPIgniteContext",
-    "ParallelClosure",
+    "groups", "compat", "PeerComm", "cost_log", "cost_scope",
+    "MPIgniteContext", "ParallelClosure",
     "RANK_AXIS", "flat_mesh", "parallelize_func", "LocalComm",
-    "ParallelFuncRDD",
+    "ParallelFuncRDD", "ClusterComm", "ClusterFuncRDD", "ExecutorFailure",
+    "Mailbox", "MessageComm",
 ]

@@ -1,19 +1,24 @@
 """Parallel closures -- the paper's ``sc.parallelizeFunc(f).execute(n)``.
 
-Two execution modes mirror Spark's local vs. cluster deployments:
+Three execution modes mirror Spark's deployments:
 
-- ``mode="local"``  : n lockstep python threads with a real message-matching
+- ``mode="local"``   : n lockstep python threads with a real message-matching
   runtime (``LocalComm``) -- arbitrary payloads, futures, runtime split.
-- ``mode="spmd"``   : one program instance per device of a flat JAX mesh,
+- ``mode="cluster"`` : n genuinely separate executor *processes* joined by
+  the TCP wire protocol in ``core.cluster`` -- same runtime semantics as
+  local (receiver-side buffering, dynamic matching), plus heartbeat
+  failure detection and checkpoint-restart supervision.
+- ``mode="spmd"``    : one program instance per device of a flat JAX mesh,
   compiled with ``shard_map``; the closure receives a ``PeerComm`` and its
   comm calls lower to ICI collectives. The closure's return values are
   gathered to the driver as a list (paper: "an array of return values from
   each process"), and the jit boundary is the implicit end-of-closure
   barrier the paper describes.
 
-The same closure can run in both modes when it restricts itself to the
+The same closure can run in all three modes when it restricts itself to the
 static-routing subset (DESIGN.md section 2), which is how the equivalence
-tests pin SPMD semantics to the runtime oracle.
+tests pin SPMD semantics to the runtime oracle and the cluster transport
+to both.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import compat
 from .comm import PeerComm
 from .local import ParallelFuncRDD
 
@@ -56,7 +62,14 @@ class ParallelClosure:
         if mode == "local":
             if n is None:
                 raise ValueError("local mode requires an instance count")
-            return ParallelFuncRDD(self._fn, timeout=self._timeout).execute(n)
+            return ParallelFuncRDD(self._fn, timeout=self._timeout,
+                                   backend=self._backend).execute(n)
+        if mode == "cluster":
+            from .cluster import ClusterFuncRDD
+            if n is None:
+                raise ValueError("cluster mode requires an instance count")
+            return ClusterFuncRDD(self._fn, timeout=self._timeout,
+                                  backend=self._backend).execute(n)
         if mode != "spmd":
             raise ValueError(f"unknown mode {mode!r}")
         mesh = mesh if mesh is not None else flat_mesh(n)
@@ -69,10 +82,10 @@ class ParallelClosure:
                 out = jnp.zeros((), jnp.int32)
             return jax.tree.map(lambda v: jnp.asarray(v)[None], out)
 
-        smapped = jax.shard_map(body, mesh=mesh, in_specs=(),
+        smapped = compat.shard_map(body, mesh=mesh, in_specs=(),
                                 out_specs=P(RANK_AXIS))
         run = jax.jit(smapped) if jit else smapped
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             out = run()
         out = jax.tree.map(np.asarray, out)
         leaves = jax.tree.leaves(out)

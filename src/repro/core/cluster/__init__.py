@@ -1,0 +1,25 @@
+"""Cluster transport: the paper's cluster deployment with real processes.
+
+- ``wire``       : length-prefixed frames + numpy/pytree payload codec
+- ``executor``   : executor process (mailbox over TCP, heartbeats,
+                   ``ClusterComm``)
+- ``driver``     : ``ClusterFuncRDD`` -- spawn/route/failure-detect
+- ``supervisor`` : heartbeat-triggered checkpoint-restart recovery
+                   (``ClusterSupervisor``), degrading to the phase-1
+                   ``linear`` backend per ``train.ft.RecoveryPolicy``
+"""
+from . import wire
+from .driver import ClusterFuncRDD, ExecutorFailure
+from .executor import ClusterComm
+
+__all__ = ["wire", "ClusterFuncRDD", "ExecutorFailure", "ClusterComm",
+           "ClusterSupervisor", "RunContext"]
+
+
+def __getattr__(name):
+    # Lazy: supervisor pulls in repro.train (checkpoint/ft), which imports
+    # repro.core back -- deferring breaks the cycle at package-init time.
+    if name in ("ClusterSupervisor", "RunContext"):
+        from . import supervisor
+        return getattr(supervisor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

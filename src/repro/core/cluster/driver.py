@@ -1,0 +1,239 @@
+"""Driver side of the cluster transport: spawn, route, detect failure.
+
+``ClusterFuncRDD.execute(n)`` is the process-separated twin of the local
+``ParallelFuncRDD``: it forks n executor processes, accepts one TCP
+connection per rank, and then acts as the message router the paper's
+Spark driver RPC endpoints play -- every ``msg`` frame an executor sends
+is forwarded to the destination rank's connection, where the receiving
+executor buffers it in its matched mailbox.
+
+Failure detection is heartbeat-based: executors announce liveness every
+``hb_interval`` seconds and the driver's monitor declares a rank dead
+when its announcements go quiet for ``hb_timeout`` seconds (a dead
+process stops heartbeating because its socket closes; a wedged one stops
+because its closure stalled the process). Death of any rank aborts the
+world with ``ExecutorFailure`` -- the supervisor layer
+(``cluster.supervisor``) turns that into checkpoint-restart recovery.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import queue
+import socket
+import threading
+import time
+from typing import Any, Callable
+
+from . import wire
+from .executor import executor_main
+
+
+class ExecutorFailure(RuntimeError):
+    """One or more executor processes were declared dead."""
+
+    def __init__(self, dead_ranks: list[int], reason: str):
+        self.dead_ranks = dead_ranks
+        self.reason = reason
+        super().__init__(f"executor rank(s) {dead_ranks} failed: {reason}")
+
+
+class ClusterFuncRDD:
+    """RDD-of-a-function executed across real OS processes.
+
+    ``backend`` picks the collective algorithm family inside the
+    executors: ``linear`` (paper phase-1 master relay), ``ring`` (phase-2
+    peer-to-peer) or ``native`` (alias of linear, for closure portability
+    with the SPMD backend -- see ``matching.normalize_backend``).
+    """
+
+    def __init__(self, fn: Callable, timeout: float = 60.0,
+                 backend: str = "linear", hb_interval: float = 0.1,
+                 hb_timeout: float = 2.0):
+        self._fn = fn
+        self._timeout = timeout
+        self._backend = backend
+        self._hb_interval = hb_interval
+        self._hb_timeout = hb_timeout
+
+    def execute(self, n: int) -> list:
+        if n < 1:
+            raise ValueError("cluster mode needs at least one executor")
+        try:
+            mp = multiprocessing.get_context("fork")
+        except ValueError as e:  # pragma: no cover - non-POSIX platforms
+            raise RuntimeError(
+                "cluster mode requires the fork start method (POSIX); use "
+                "mode='local' here") from e
+
+        server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        server.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        server.bind(("127.0.0.1", 0))
+        server.listen(n)
+        port = server.getsockname()[1]
+
+        procs = [mp.Process(
+            target=executor_main,
+            args=(self._fn, rank, n, port, self._backend, self._timeout,
+                  self._hb_interval),
+            daemon=True) for rank in range(n)]
+        for p in procs:
+            p.start()
+
+        conns: list[socket.socket | None] = [None] * n
+        out_qs: list[queue.Queue] = [queue.Queue(maxsize=128)
+                                     for _ in range(n)]
+        last_seen = [time.time()] * n
+        results: list[Any] = [None] * n
+        done = [False] * n
+        errors: list[str | None] = [None] * n
+        done_event = threading.Event()
+        error_event = threading.Event()
+        lock = threading.Lock()
+
+        try:
+            server.settimeout(self._timeout)
+            pending = n
+            while pending:
+                conn, _ = server.accept()
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                frame = wire.recv_frame(conn)
+                if frame is None or frame[0].get("kind") != "hello":
+                    conn.close()
+                    continue
+                rank = frame[0]["rank"]
+                conns[rank] = conn
+                last_seen[rank] = time.time()
+                pending -= 1
+        except socket.timeout:
+            self._teardown(procs, conns, out_qs)
+            server.close()
+            missing = [r for r in range(n) if conns[r] is None]
+            raise ExecutorFailure(missing, "never connected to the driver")
+        finally:
+            server.settimeout(None)
+
+        def writer(rank: int):
+            """Sole writer for one connection: drains the rank's outbound
+            queue so that no *reader* ever blocks on a slow destination.
+            Keeps consuming after a write error (the frames are dropped);
+            a None sentinel ends the thread."""
+            conn, q = conns[rank], out_qs[rank]
+            broken = False
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                if broken:
+                    continue
+                header, payload = item
+                try:
+                    wire.send_frame(conn, header, payload)
+                except (ConnectionError, OSError):
+                    broken = True
+
+        def route(rank: int):
+            """Read this rank's frames; record liveness and results, and
+            enqueue forwards. *Any* inbound bytes count as liveness (via
+            on_bytes), so a rank mid-way through a multi-second bulk
+            transfer -- whose heartbeat thread may be blocked behind the
+            send -- is never declared dead while its data is flowing; and
+            forwarding is queued to the destination's writer thread, so a
+            slow destination cannot stop this thread from reading the
+            source's heartbeats."""
+            conn = conns[rank]
+
+            def alive(_nbytes):
+                last_seen[rank] = time.time()
+
+            try:
+                while True:
+                    frame = wire.recv_frame(conn, on_bytes=alive)
+                    if frame is None:
+                        return      # heartbeats stop; monitor takes it from here
+                    alive(0)
+                    header, payload = frame
+                    kind = header.get("kind")
+                    if kind == "msg":
+                        out_qs[header["dst"]].put((header, payload))
+                    elif kind == "result":
+                        with lock:
+                            if header["ok"]:
+                                results[rank] = wire.decode(payload)
+                            else:
+                                errors[rank] = wire.decode(payload)
+                                error_event.set()
+                            done[rank] = True
+                            if all(done):
+                                done_event.set()
+            except (ConnectionError, OSError, ValueError):
+                return
+
+        writers = [threading.Thread(target=writer, args=(r,), daemon=True)
+                   for r in range(n)]
+        routers = [threading.Thread(target=route, args=(r,), daemon=True)
+                   for r in range(n)]
+        for t in writers + routers:
+            t.start()
+
+        # -- monitor: heartbeat staleness is the failure signal; an error
+        #    result from any rank aborts the world (the others would only
+        #    deadlock waiting for it) ----------------------------------------
+        deadline = time.time() + self._timeout
+        try:
+            while not done_event.is_set():
+                if done_event.wait(self._hb_interval):
+                    break
+                if error_event.is_set():
+                    break
+                now = time.time()
+                dead = [r for r in range(n)
+                        if not done[r]
+                        and now - last_seen[r] > self._hb_timeout]
+                if dead:
+                    self._raise_executor_errors(errors)  # root cause first
+                    raise ExecutorFailure(
+                        dead, f"missed heartbeats for >{self._hb_timeout:.1f}s")
+                if now > deadline:
+                    self._raise_executor_errors(errors)  # root cause first
+                    raise TimeoutError(
+                        "cluster closure deadlocked (implicit barrier at "
+                        "closure end never reached)")
+        finally:
+            self._teardown(procs, conns, out_qs)
+            server.close()
+
+        self._raise_executor_errors(errors)
+        return results
+
+    @staticmethod
+    def _raise_executor_errors(errors):
+        failed = [(r, e) for r, e in enumerate(errors) if e is not None]
+        if failed:
+            raise RuntimeError("\n".join(
+                f"executor rank {r} raised:\n{e}" for r, e in failed))
+
+    @staticmethod
+    def _teardown(procs, conns, out_qs):
+        # best-effort graceful exit (skip a backlogged queue: closing the
+        # connection below also signals the executor to leave)
+        for conn, q in zip(conns, out_qs):
+            if conn is None:
+                continue
+            try:
+                q.put_nowait(({"kind": "ctrl", "op": "exit"}, b""))
+            except queue.Full:
+                pass
+        for p in procs:
+            p.join(timeout=2.0)
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=2.0)
+        for conn in conns:
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        for q in out_qs:   # connections closed => writers drain fast
+            q.put(None)

@@ -1,0 +1,150 @@
+"""Executor side of the cluster transport.
+
+Each executor is a real OS process hosting one rank of the world. It
+dials the driver's TCP endpoint, then runs three concerns:
+
+- a reader thread draining routed frames into the rank's matched
+  ``Mailbox`` (receiver-side buffering, exactly as in local mode);
+- a heartbeat thread announcing liveness every ``hb_interval`` seconds
+  (the driver's failure detector watches for these going quiet);
+- the main thread executing the user closure against a ``ClusterComm``
+  and shipping the return value (or traceback) back as a result frame.
+
+``ClusterComm`` subclasses the transport-agnostic ``MessageComm``: a send
+writes one ``msg`` frame to the driver, which routes it to the
+destination rank's connection; collectives and ``split`` are therefore
+the same phase-1/phase-2 message compositions the thread runtime uses.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import time
+import traceback
+from typing import Any, Callable
+
+from ..matching import Mailbox, MessageComm
+from . import wire
+
+
+class ExecutorChannel:
+    """One rank's connection to the driver: socket + write lock + mailbox."""
+
+    def __init__(self, sock: socket.socket, rank: int, hb_interval: float):
+        self.sock = sock
+        self.rank = rank
+        self.wlock = threading.Lock()
+        self.mailbox = Mailbox()
+        self.exit_requested = threading.Event()
+        self._hb_stop = threading.Event()
+        self._hb_interval = hb_interval
+        self._reader = threading.Thread(target=self._read_loop, daemon=True)
+        self._reader.start()
+        self._hb = threading.Thread(target=self._hb_loop, daemon=True)
+        self._hb.start()
+
+    def _read_loop(self):
+        try:
+            while True:
+                frame = wire.recv_frame(self.sock)
+                if frame is None:
+                    break
+                header, payload = frame
+                kind = header.get("kind")
+                if kind == "msg":
+                    self.mailbox.put(header["ctx"], header["tag"],
+                                     header["src"], wire.decode(payload))
+                elif kind == "ctrl" and header.get("op") == "exit":
+                    break
+        except (ConnectionError, OSError):
+            pass
+        finally:
+            self.exit_requested.set()
+
+    def _hb_loop(self):
+        while not self._hb_stop.wait(self._hb_interval):
+            if self.exit_requested.is_set():
+                return
+            try:
+                wire.send_frame(self.sock, {"kind": "hb", "rank": self.rank,
+                                            "t": time.time()},
+                                lock=self.wlock)
+            except (ConnectionError, OSError):
+                return
+
+    def stop_heartbeat(self):
+        """Test hook: silence this rank's failure-detector signal (models a
+        wedged executor whose process is still alive)."""
+        self._hb_stop.set()
+
+    def send_msg(self, dst_world: int, ctx: int, tag: int, src_world: int,
+                 payload: Any) -> None:
+        wire.send_frame(self.sock,
+                        {"kind": "msg", "dst": dst_world, "ctx": ctx,
+                         "tag": tag, "src": src_world},
+                        wire.encode_parts(payload), lock=self.wlock)
+
+    def send_result(self, ok: bool, payload: list[bytes]) -> None:
+        wire.send_frame(self.sock, {"kind": "result", "rank": self.rank,
+                                    "ok": ok}, payload, lock=self.wlock)
+
+
+class ClusterComm(MessageComm):
+    """MPIgnite communicator over the process-separated TCP transport."""
+
+    def __init__(self, channel: ExecutorChannel, group: tuple[int, ...],
+                 rank_in_group: int, ctx: int, epoch: tuple = (),
+                 backend: str = "linear", timeout: float = 60.0):
+        super().__init__(group, rank_in_group, ctx, epoch, backend)
+        self._chan = channel
+        self._timeout = timeout
+
+    # -- transport ----------------------------------------------------------
+    def _put(self, world_dst: int, ctx: int, tag: int, src_world: int,
+             payload: Any) -> None:
+        self._chan.send_msg(world_dst, ctx, tag, src_world, payload)
+
+    def _get(self, ctx: int, tag: int, src_world: int) -> Any:
+        return self._chan.mailbox.get(ctx, tag, src_world, self._timeout)
+
+    def _clone(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
+               epoch: tuple) -> "ClusterComm":
+        return ClusterComm(self._chan, group, rank_in_group, ctx, epoch,
+                           self._backend, self._timeout)
+
+    # -- cluster extras -----------------------------------------------------
+    @property
+    def channel(self) -> ExecutorChannel:
+        return self._chan
+
+    def die(self, exit_code: int = 1):
+        """Test hook: abrupt node loss -- no result frame, no goodbye."""
+        os._exit(exit_code)
+
+
+def executor_main(fn: Callable[[ClusterComm], Any], rank: int, size: int,
+                  port: int, backend: str, timeout: float,
+                  hb_interval: float, host: str = "127.0.0.1") -> None:
+    """Entry point of an executor process (spawned via fork, so ``fn`` may
+    be any closure -- lambdas and captured arrays included)."""
+    sock = socket.create_connection((host, port), timeout=timeout)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    wire.send_frame(sock, {"kind": "hello", "rank": rank, "pid": os.getpid()})
+    chan = ExecutorChannel(sock, rank, hb_interval)
+    comm = ClusterComm(chan, tuple(range(size)), rank, ctx=0,
+                       backend=backend, timeout=timeout)
+    try:
+        result = fn(comm)
+        chan.send_result(True, wire.encode_parts(result))
+    except BaseException:  # noqa: BLE001 -- ship the traceback to the driver
+        try:
+            chan.send_result(False, wire.encode_parts(traceback.format_exc()))
+        except (ConnectionError, OSError):
+            pass
+        chan.exit_requested.wait(timeout)
+        os._exit(1)
+    # Stay alive until the driver says exit: other ranks may still route
+    # messages here, and the driver owns teardown ordering.
+    chan.exit_requested.wait(timeout)
+    os._exit(0)

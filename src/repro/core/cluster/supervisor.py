@@ -1,0 +1,110 @@
+"""Checkpoint-restart supervision for the cluster runtime.
+
+This is the paper's section-3.1 fault story made real: the driver's
+heartbeat monitor declares a rank dead (``ExecutorFailure``), the
+supervisor restores the latest checkpoint, relaunches the world with the
+degraded phase-1 ``linear`` backend for ``recovery_steps`` steps (master
+relay is the mode the paper falls back to while coping with faults), and
+then the workload resumes the fast peer-to-peer backend -- all driven by
+the very same ``RecoveryPolicy``/``SupervisorState`` machinery
+``train.ft`` previously exercised only against *simulated* failures.
+
+The workload contract is step-structured: the caller provides
+``make_closure(run) -> fn(comm)`` where ``run`` tells the closure where
+to resume and which backend each step must use. Inside the closure,
+``run.comm_for(comm, step)`` applies the degrade schedule and rank 0
+persists state with ``run.save(step, state)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from ...train import ft
+from .driver import ClusterFuncRDD, ExecutorFailure
+
+
+@dataclasses.dataclass
+class RunContext:
+    """What one (re)launch of the world knows about recovery."""
+    ckpt_dir: str
+    start_step: int                  # first step this launch must execute
+    attempt: int                     # 0 on the first launch
+    degraded_until: int              # steps <= this use the degrade backend
+    fast_backend: str
+    degrade_backend: str
+
+    def backend_for(self, step: int) -> str:
+        return (self.degrade_backend if step <= self.degraded_until
+                else self.fast_backend)
+
+    def comm_for(self, comm, step: int):
+        """The communicator to use at ``step`` (same transport, possibly
+        degraded algorithm)."""
+        want = self.backend_for(step)
+        return comm if comm.backend == want else comm.with_backend(want)
+
+    def save(self, step: int, state: dict, meta: dict | None = None) -> str:
+        from ...train import checkpoint as CKPT
+        return CKPT.save(self.ckpt_dir, step, state, meta)
+
+    def restore(self) -> tuple[dict, dict, int] | None:
+        """(flat_leaves, meta, step) of the latest checkpoint, or None."""
+        from ...train import checkpoint as CKPT
+        if CKPT.latest_step(self.ckpt_dir) is None:
+            return None
+        return CKPT.load(self.ckpt_dir)
+
+
+@dataclasses.dataclass
+class ClusterSupervisor:
+    """Relaunch-from-checkpoint loop above ``ClusterFuncRDD``."""
+    ckpt_dir: str
+    policy: ft.RecoveryPolicy = dataclasses.field(
+        default_factory=ft.RecoveryPolicy)
+    fast_backend: str = "ring"
+    timeout: float = 60.0
+    hb_interval: float = 0.1
+    hb_timeout: float = 1.0
+    restart_delay: float = 0.0
+
+    def __post_init__(self):
+        self.state = ft.SupervisorState()
+        self.failures: list[tuple[int, str]] = []   # (restart_step, reason)
+
+    def _latest_step(self) -> int:
+        from ...train import checkpoint as CKPT
+        return CKPT.latest_step(self.ckpt_dir) or 0
+
+    def run(self, make_closure: Callable[[RunContext], Callable], n: int,
+            ) -> list[Any]:
+        """Run ``make_closure(run_ctx)`` across ``n`` executor processes,
+        restarting from the latest checkpoint on executor death until the
+        closure completes or ``policy.max_restarts`` is exhausted."""
+        attempt = 0
+        while True:
+            start = self._latest_step()
+            run_ctx = RunContext(
+                ckpt_dir=self.ckpt_dir,
+                start_step=start,
+                attempt=attempt,
+                degraded_until=self.state.degraded_until,
+                fast_backend=self.fast_backend,
+                degrade_backend=self.policy.degrade_backend)
+            # every launch starts in the backend the schedule dictates
+            launch_backend = run_ctx.backend_for(start + 1)
+            rdd = ClusterFuncRDD(make_closure(run_ctx), timeout=self.timeout,
+                                 backend=launch_backend,
+                                 hb_interval=self.hb_interval,
+                                 hb_timeout=self.hb_timeout)
+            try:
+                return rdd.execute(n)
+            except ExecutorFailure as e:
+                restart_step = self._latest_step()
+                self.failures.append((restart_step, e.reason))
+                # raises once policy.max_restarts is exhausted
+                self.state.on_failure(restart_step, self.policy)
+                attempt += 1
+                if self.restart_delay:
+                    time.sleep(self.restart_delay)

@@ -1,0 +1,188 @@
+"""Wire protocol for the cluster transport.
+
+Frames are length-prefixed: ``[4B header len][8B payload len][JSON
+header][payload bytes]``. The header carries routing/matching metadata
+(``kind``, ``ctx``, ``tag``, ``src``, ``dst``); the payload is an encoded
+python object.
+
+The payload codec handles the three shapes the communicator API admits:
+
+- numpy arrays (any standard dtype, plus ml_dtypes names such as
+  ``bfloat16``) travel as a manifest entry + raw contiguous bytes -- no
+  pickling on the hot path;
+- pytrees of arrays (nested dict/list/tuple with JSON-able scalars) are
+  walked recursively, each array leaf becoming its own buffer;
+- anything else falls back to a pickle buffer.
+
+Encoded layout: ``[4B manifest len][JSON manifest][buffer 0][buffer 1]...``
+with every buffer's length recorded in the manifest, so decode is a single
+pass of zero-copy ``np.frombuffer`` slices.
+"""
+from __future__ import annotations
+
+import json
+import pickle
+import socket
+import struct
+from typing import Any
+
+import numpy as np
+
+_HDR = struct.Struct(">IQ")          # (header_len, payload_len)
+_MLEN = struct.Struct(">I")          # manifest length inside a payload
+
+MAX_FRAME = 1 << 34                  # 16 GiB sanity bound
+
+
+# ---------------------------------------------------------------------------
+# Payload codec
+# ---------------------------------------------------------------------------
+
+def _dtype_from_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _is_jax_array(o: Any) -> bool:
+    mod = type(o).__module__ or ""
+    return mod.startswith("jax") and hasattr(o, "__array__")
+
+
+def encode_parts(obj: Any) -> list[bytes]:
+    """Object -> list of byte chunks (manifest prefix + raw buffers).
+    Senders write each chunk with its own sendall, so bulk arrays are
+    never concatenated into one giant intermediate bytes object."""
+    bufs: list[bytes] = []
+
+    def enc(o):
+        if _is_jax_array(o):
+            o = np.asarray(o)
+        if isinstance(o, np.ndarray) and not o.dtype.hasobject:
+            bufs.append(np.ascontiguousarray(o).tobytes())
+            return {"t": "nd", "n": len(bufs[-1]), "d": o.dtype.name,
+                    "s": list(o.shape)}
+        if isinstance(o, (np.integer, np.floating, np.bool_)):
+            return {"t": "np", "d": o.dtype.name, "v": o.item()}
+        if o is None or isinstance(o, (bool, int, float, str)):
+            return {"t": "py", "v": o}
+        if isinstance(o, (list, tuple)):
+            return {"t": "list" if isinstance(o, list) else "tuple",
+                    "v": [enc(x) for x in o]}
+        if isinstance(o, dict) and all(isinstance(k, str) for k in o):
+            return {"t": "dict", "k": list(o.keys()),
+                    "v": [enc(v) for v in o.values()]}
+        bufs.append(pickle.dumps(o))
+        return {"t": "pkl", "n": len(bufs[-1])}
+
+    manifest = json.dumps(enc(obj)).encode()
+    return [_MLEN.pack(len(manifest)), manifest, *bufs]
+
+
+def encode(obj: Any) -> bytes:
+    """Object -> one contiguous self-describing bytes blob."""
+    return b"".join(encode_parts(obj))
+
+
+def decode(data: bytes) -> Any:
+    (mlen,) = _MLEN.unpack_from(data, 0)
+    manifest = json.loads(data[_MLEN.size:_MLEN.size + mlen])
+    pos = _MLEN.size + mlen
+
+    def dec(node):
+        nonlocal pos
+        t = node["t"]
+        if t == "nd":
+            n = node["n"]
+            raw = data[pos:pos + n]
+            pos += n
+            arr = np.frombuffer(raw, dtype=_dtype_from_name(node["d"]))
+            return arr.reshape(node["s"]).copy()
+        if t == "np":
+            return _dtype_from_name(node["d"]).type(node["v"])
+        if t == "py":
+            return node["v"]
+        if t == "list":
+            return [dec(x) for x in node["v"]]
+        if t == "tuple":
+            return tuple(dec(x) for x in node["v"])
+        if t == "dict":
+            return {k: dec(v) for k, v in zip(node["k"], node["v"])}
+        if t == "pkl":
+            n = node["n"]
+            raw = data[pos:pos + n]
+            pos += n
+            return pickle.loads(raw)
+        raise ValueError(f"bad manifest node type {t!r}")
+
+    return dec(manifest)
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+def send_frame(sock: socket.socket, header: dict,
+               payload: bytes | list[bytes] = b"", lock=None) -> None:
+    """Write one frame. ``payload`` may be one bytes object or a list of
+    chunks (from ``encode_parts``); each chunk gets its own sendall, so
+    bulk arrays cross without ever being concatenated. ``lock``
+    serializes writers sharing a socket."""
+    parts = [payload] if isinstance(payload, (bytes, bytearray)) else payload
+    h = json.dumps(header).encode()
+    prefix = _HDR.pack(len(h), sum(len(p) for p in parts)) + h
+
+    def write():
+        sock.sendall(prefix)
+        for p in parts:
+            if p:
+                sock.sendall(p)
+
+    if lock is not None:
+        with lock:
+            write()
+    else:
+        write()
+
+
+def recv_exact(sock: socket.socket, n: int, on_bytes=None) -> bytes | None:
+    """Read exactly n bytes; None on clean EOF at a frame boundary.
+    ``on_bytes(k)`` fires per chunk -- failure detectors use it to treat
+    in-flight bulk transfers as proof of liveness."""
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None
+            raise ConnectionError("connection closed mid-frame")
+        chunks.append(chunk)
+        got += len(chunk)
+        if on_bytes is not None:
+            on_bytes(len(chunk))
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket, on_bytes=None
+               ) -> tuple[dict, bytes] | None:
+    """Read one frame; None on EOF."""
+    head = recv_exact(sock, _HDR.size)
+    if head is None:
+        return None
+    hlen, plen = _HDR.unpack(head)
+    if hlen > MAX_FRAME or plen > MAX_FRAME:
+        raise ValueError(f"oversized frame (header={hlen}, payload={plen})")
+    h = recv_exact(sock, hlen)
+    if h is None:
+        raise ConnectionError("connection closed mid-frame")
+    header = json.loads(h)
+    payload = b""
+    if plen:
+        p = recv_exact(sock, plen, on_bytes)
+        if p is None:
+            raise ConnectionError("connection closed mid-frame")
+        payload = p
+    return header, payload

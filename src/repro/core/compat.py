@@ -1,0 +1,36 @@
+"""Version compatibility shims for the JAX APIs this repo relies on.
+
+The codebase targets the modern spellings (``jax.shard_map``,
+``jax.set_mesh``); older installed versions (0.4.x) ship the same
+functionality as ``jax.experimental.shard_map.shard_map`` and the
+``Mesh`` context manager. Import from here instead of ``jax`` directly.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental namespace; check_vma was called check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return _enter_mesh(mesh)
+
+
+@contextlib.contextmanager
+def _enter_mesh(mesh):
+    with mesh:
+        yield mesh

@@ -8,297 +8,61 @@ tag matching, arbitrary (any-python-object) payloads, futures, blocking and
 non-blocking receive, and MPI_Comm_split performed with actual messages
 through the root (as section 3.1 of the paper describes).
 
+All of the matching and collective logic lives in the transport-agnostic
+``matching.MessageComm``; this module contributes only the in-process
+transport (a shared list of mailboxes) and the thread launcher. The
+process-separated twin is ``cluster.ClusterComm`` (TCP frames through the
+driver); both run the same closures, which is how the cross-mode
+equivalence tests pin one deployment to the other.
+
 It is the executable oracle for the SPMD ``PeerComm`` backends and the
 engine behind ``ParallelClosure.execute(n, mode="local")``, which lets the
 paper's listings run verbatim on this CPU container with any instance count.
 """
 from __future__ import annotations
 
-import queue
 import threading
-from concurrent.futures import Future
-from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
-from . import groups as G
+from .matching import Mailbox, MessageComm
 
-
-@dataclass
-class _Mailbox:
-    """Receiver-side buffering: unmatched messages wait here (paper: 'we
-    buffer messages on the receiving worker')."""
-    lock: threading.Lock = field(default_factory=threading.Lock)
-    cond: threading.Condition = None  # type: ignore[assignment]
-    msgs: list[tuple[int, int, int, Any]] = field(default_factory=list)
-    # each: (ctx, tag, src_world_rank, payload)
-
-    def __post_init__(self):
-        self.cond = threading.Condition(self.lock)
-
-    def put(self, ctx: int, tag: int, src: int, payload: Any) -> None:
-        with self.lock:
-            self.msgs.append((ctx, tag, src, payload))
-            self.cond.notify_all()
-
-    def get(self, ctx: int, tag: int, src: int, timeout: float) -> Any:
-        def match():
-            for i, (c, t, s, _) in enumerate(self.msgs):
-                if c == ctx and t == tag and s == src:
-                    return i
-            return None
-        with self.lock:
-            i = match()
-            while i is None:
-                if not self.cond.wait(timeout=timeout):
-                    raise TimeoutError(
-                        f"receive(src={src}, tag={tag}, ctx={ctx}) timed out")
-                i = match()
-            return self.msgs.pop(i)[3]
+# Backwards-compatible alias: the mailbox used to live here.
+_Mailbox = Mailbox
 
 
 class _World:
-    """Shared state for one execute(): mailboxes + collective scratchpads."""
+    """Shared state for one execute(): one mailbox per world rank."""
 
     def __init__(self, size: int, timeout: float = 30.0):
         self.size = size
         self.timeout = timeout
-        self.mailboxes = [_Mailbox() for _ in range(size)]
-        self._barrier_lock = threading.Lock()
-        self._barriers: dict[tuple, threading.Barrier] = {}
-        self._scratch: dict[tuple, list] = {}
-
-    def barrier_for(self, key: tuple, parties: int) -> threading.Barrier:
-        with self._barrier_lock:
-            if key not in self._barriers:
-                self._barriers[key] = threading.Barrier(parties)
-            return self._barriers[key]
-
-    def scratch_for(self, key: tuple, parties: int) -> list:
-        with self._barrier_lock:
-            if key not in self._scratch:
-                self._scratch[key] = [None] * parties
-            return self._scratch[key]
+        self.mailboxes = [Mailbox() for _ in range(size)]
 
 
-class LocalComm:
+class LocalComm(MessageComm):
     """The user-facing communicator handed to a parallel closure (paper's
-    ``SparkComm``). Method names keep the paper's spelling alongside
-    pythonic aliases used by the rest of the framework."""
+    ``SparkComm``), delivered over in-process mailboxes."""
 
-    def __init__(self, world: _World, group: tuple[int, ...], rank_in_group: int,
-                 ctx: int, epoch: tuple = ()):
+    def __init__(self, world: _World, group: tuple[int, ...],
+                 rank_in_group: int, ctx: int, epoch: tuple = (),
+                 backend: str = "linear"):
+        super().__init__(group, rank_in_group, ctx, epoch, backend)
         self._world = world
-        self._group = group           # world ranks, ordered by comm rank
-        self._rank = rank_in_group
-        self._ctx = ctx
-        # epoch disambiguates successive collectives on the same communicator
-        # (each rank counts its own calls; SPMD => counts agree).
-        self._calls = 0
-        self._epoch = epoch
 
-    # -- introspection ------------------------------------------------------
-    def get_rank(self) -> int:
-        return self._rank
+    # -- transport ----------------------------------------------------------
+    def _put(self, world_dst: int, ctx: int, tag: int, src_world: int,
+             payload: Any) -> None:
+        self._world.mailboxes[world_dst].put(ctx, tag, src_world, payload)
 
-    def get_size(self) -> int:
-        return len(self._group)
-
-    getRank = property(get_rank)   # paper spelling: world.getRank
-    getSize = property(get_size)
-
-    @property
-    def context_id(self) -> int:
-        return self._ctx
-
-    # -- point to point -----------------------------------------------------
-    def send(self, dst: int, tag: int, data: Any) -> None:
-        """Always non-blocking (paper: 'sending in MPIgnite is always
-        nonblocking'); buffered at the receiver."""
-        world_dst = self._group[dst]
-        self._world.mailboxes[world_dst].put(
-            self._ctx, tag, self._group[self._rank], data)
-
-    def receive(self, src: int, tag: int) -> Any:
-        """Blocking receive ~ MPI_Recv."""
-        world_src = self._group[src]
+    def _get(self, ctx: int, tag: int, src_world: int) -> Any:
         me = self._group[self._rank]
-        return self._world.mailboxes[me].get(
-            self._ctx, tag, world_src, self._world.timeout)
+        return self._world.mailboxes[me].get(ctx, tag, src_world,
+                                             self._world.timeout)
 
-    def receive_async(self, src: int, tag: int) -> Future:
-        """Non-blocking receive ~ MPI_Irecv; returns a Future (Scala Future
-        in the paper; ``Await.result`` ~ ``future.result()`` ~ MPI_Wait)."""
-        fut: Future = Future()
-
-        def run():
-            try:
-                fut.set_result(self.receive(src, tag))
-            except BaseException as e:  # noqa: BLE001
-                fut.set_exception(e)
-        threading.Thread(target=run, daemon=True).start()
-        return fut
-
-    receiveAsync = receive_async  # paper spelling
-
-    # -- collectives (composed from p2p through the root, exactly the
-    #    phase-1 implementation the paper describes) -------------------------
-    def _next_key(self) -> tuple:
-        self._calls += 1
-        return (*self._epoch, self._ctx, self._calls)
-
-    def barrier(self) -> None:
-        key = ("bar", *self._next_key())
-        self._world.barrier_for(key, len(self._group)).wait(self._world.timeout)
-
-    def broadcast(self, root: int, data: Any = None) -> Any:
-        """comm.broadcast[T](root, data): only the root's payload matters."""
-        tag = -2  # reserved collective tag space
-        key = self._next_key()
-        if self._rank == root:
-            for r in range(len(self._group)):
-                if r != root:
-                    self._send_coll(r, tag, key, data)
-            return data
-        return self._recv_coll(root, tag, key)
-
-    def allreduce(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
-        """comm.allReduce[T](data, f) with an arbitrary reduction function
-        (the paper's enhancement over MPI's fixed op set). Phase-1 algorithm:
-        gather to rank 0, fold in comm-rank order, broadcast back."""
-        tag = -3
-        key = self._next_key()
-        if self._rank == 0:
-            acc = data
-            for r in range(1, len(self._group)):
-                acc = f(acc, self._recv_coll(r, tag, key))
-            for r in range(1, len(self._group)):
-                self._send_coll(r, tag, key, acc)
-            return acc
-        self._send_coll(0, tag, key, data)
-        return self._recv_coll(0, tag, key)
-
-    def allgather(self, data: Any) -> list:
-        tag = -4
-        key = self._next_key()
-        if self._rank == 0:
-            out = [None] * len(self._group)
-            out[0] = data
-            for r in range(1, len(self._group)):
-                out[r] = self._recv_coll(r, tag, key)
-            for r in range(1, len(self._group)):
-                self._send_coll(r, tag, key, out)
-            return out
-        self._send_coll(0, tag, key, data)
-        return self._recv_coll(0, tag, key)
-
-    def reducescatter(self, chunks: Sequence[Any], f: Callable) -> Any:
-        """Each rank contributes a list of P chunks; rank i gets the f-fold
-        of everyone's chunk i."""
-        if len(chunks) != len(self._group):
-            raise ValueError("reducescatter needs one chunk per rank")
-        gathered = self.allgather(list(chunks))
-        mine = gathered[0][self._rank]
-        for contrib in gathered[1:]:
-            mine = f(mine, contrib[self._rank])
-        return mine
-
-    def reduce(self, root: int, data: Any, f: Callable[[Any, Any], Any]) -> Any:
-        """MPI_Reduce: fold everyone's data at ``root`` (None elsewhere).
-        One of the 'more methods' the paper's section 6 plans."""
-        tag = -7
-        key = self._next_key()
-        if self._rank == root:
-            acc = data
-            for r in range(len(self._group)):
-                if r != root:
-                    acc = f(acc, self._recv_coll(r, tag, key))
-            return acc
-        self._send_coll(root, tag, key, data)
-        return None
-
-    def gather(self, root: int, data: Any) -> list | None:
-        """MPI_Gather: rank-ordered list at ``root`` (None elsewhere)."""
-        tag = -8
-        key = self._next_key()
-        if self._rank == root:
-            out = [None] * len(self._group)
-            out[root] = data
-            for r in range(len(self._group)):
-                if r != root:
-                    out[r] = self._recv_coll(r, tag, key)
-            return out
-        self._send_coll(root, tag, key, data)
-        return None
-
-    def scan(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
-        """MPI_Scan: inclusive prefix reduction -- rank r receives
-        f(x_0, ..., x_r). Linear chain through the ranks."""
-        tag = -9
-        key = self._next_key()
-        if self._rank == 0:
-            acc = data
-        else:
-            acc = f(self._recv_coll(self._rank - 1, tag, key), data)
-        if self._rank + 1 < len(self._group):
-            self._send_coll(self._rank + 1, tag, key, acc)
-        return acc
-
-    def alltoall(self, chunks: Sequence[Any]) -> list:
-        if len(chunks) != len(self._group):
-            raise ValueError("alltoall needs one chunk per rank")
-        tag = -5
-        key = self._next_key()
-        for r in range(len(self._group)):
-            if r != self._rank:
-                self._send_coll(r, tag, key, chunks[r])
-        out = [None] * len(self._group)
-        out[self._rank] = chunks[self._rank]
-        for r in range(len(self._group)):
-            if r != self._rank:
-                out[r] = self._recv_coll(r, tag, key)
-        return out
-
-    def _send_coll(self, dst: int, tag: int, key: tuple, data: Any) -> None:
-        world_dst = self._group[dst]
-        self._world.mailboxes[world_dst].put(
-            hash((self._ctx, tag, key)), tag, self._group[self._rank], data)
-
-    def _recv_coll(self, src: int, tag: int, key: tuple) -> Any:
-        me = self._group[self._rank]
-        return self._world.mailboxes[me].get(
-            hash((self._ctx, tag, key)), tag, self._group[src],
-            self._world.timeout)
-
-    # -- split (paper section 3.1: ranks send (global rank, key, color) to the
-    #    lowest participating rank; it groups by color, sorts by key, and
-    #    broadcasts the new rank mapping) ------------------------------------
-    def split(self, color: int, key: int) -> "LocalComm":
-        tag = -6
-        ckey = self._next_key()
-        root = 0
-        if self._rank == root:
-            triples = [(self._rank, key, color)]
-            for r in range(1, len(self._group)):
-                triples.append(self._recv_coll(r, tag, ckey))
-            colors = {}
-            for r, k, c in triples:
-                colors.setdefault(c, []).append((k, r))
-            mapping = {}
-            for c, members in colors.items():
-                members.sort()
-                mapping[c] = tuple(r for _, r in members)
-            for r in range(1, len(self._group)):
-                self._send_coll(r, tag, ckey, mapping)
-        else:
-            self._send_coll(root, tag, ckey, (self._rank, key, color))
-            mapping = self._recv_coll(root, tag, ckey)
-        my_group_parent_ranks = mapping[color]
-        new_group = tuple(self._group[r] for r in my_group_parent_ranks)
-        new_rank = my_group_parent_ranks.index(self._rank)
-        new_ctx = G.context_id((tuple(sorted(new_group)),), self._ctx) ^ hash(
-            ("split", *ckey, color)) & 0xFFFFFFFF
-        return LocalComm(self._world, new_group, new_rank, new_ctx,
-                         epoch=(*self._epoch, "s", self._calls, color))
+    def _clone(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
+               epoch: tuple) -> "LocalComm":
+        return LocalComm(self._world, group, rank_in_group, ctx, epoch,
+                         self._backend)
 
 
 class ParallelFuncRDD:
@@ -307,9 +71,11 @@ class ParallelFuncRDD:
     threads and returns the list of per-rank results (the paper: 'an array
     of return values from each process')."""
 
-    def __init__(self, fn: Callable[[LocalComm], Any], timeout: float = 60.0):
+    def __init__(self, fn: Callable[[LocalComm], Any], timeout: float = 60.0,
+                 backend: str = "linear"):
         self._fn = fn
         self._timeout = timeout
+        self._backend = backend
 
     def execute(self, n: int) -> list:
         world = _World(n, timeout=self._timeout)
@@ -317,7 +83,8 @@ class ParallelFuncRDD:
         errors: list[BaseException | None] = [None] * n
 
         def run(rank: int):
-            comm = LocalComm(world, tuple(range(n)), rank, ctx=0)
+            comm = LocalComm(world, tuple(range(n)), rank, ctx=0,
+                             backend=self._backend)
             try:
                 results[rank] = self._fn(comm)
             except BaseException as e:  # noqa: BLE001

@@ -1,0 +1,402 @@
+"""Transport-agnostic message matching and p2p-composed collectives.
+
+The paper's runtime semantics -- receiver-side buffering with dynamic
+``(ctx, tag, src)`` matching, always-nonblocking sends, futures for
+``receiveAsync``, and collectives composed from point-to-point messages
+(phase-1 master relay through a root, phase-2 ring) -- do not depend on
+*how* a message travels. This module holds everything above the
+transport: the matched ``Mailbox`` and the ``MessageComm`` base class.
+
+Two transports plug in underneath:
+
+- ``local.LocalComm``      : in-process delivery between worker threads
+  (the paper's local deployment; the semantic oracle).
+- ``cluster.ClusterComm``  : length-prefixed TCP frames routed through
+  the driver between genuinely separate executor processes (the paper's
+  cluster deployment).
+
+A subclass provides three hooks: ``_put`` (deliver a payload to a world
+rank's mailbox), ``_get`` (matched receive from this rank's own mailbox)
+and ``_clone`` (construct a same-transport communicator for ``split``).
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+from . import groups as G
+
+#: algorithms available to message-composed collectives. ``linear`` is the
+#: paper's phase-1 (every byte relays through a root/master); ``ring`` is
+#: the phase-2 peer-to-peer mode. ``native`` is accepted as an alias of
+#: ``linear`` so closures written for the SPMD backend run unchanged --
+#: linear is the runtime default because its root-ordered fold keeps
+#: ``allreduce`` deterministic for arbitrary (non-commutative) functions,
+#: the property the thread oracle documents.
+MESSAGE_BACKENDS = ("linear", "ring")
+
+
+def normalize_backend(backend: str) -> str:
+    backend = "linear" if backend == "native" else backend
+    if backend not in MESSAGE_BACKENDS:
+        raise ValueError(f"unknown message backend {backend!r}; "
+                         f"expected one of {MESSAGE_BACKENDS} or 'native'")
+    return backend
+
+
+@functools.lru_cache(maxsize=1024)
+def stable_ctx(ctx: int, tag: int, key: tuple) -> int:
+    """Deterministic collective-context id, identical across processes
+    (``hash()`` is salted per interpreter, so it cannot go on the wire).
+    Cached: one collective calls this with identical arguments for every
+    constituent message (2(p-1) times at a linear allreduce root)."""
+    h = hashlib.blake2b(repr((ctx, tag, key)).encode(),
+                        digest_size=8).digest()
+    return int.from_bytes(h, "big")
+
+
+@dataclass
+class Mailbox:
+    """Receiver-side buffering: unmatched messages wait here (paper: 'we
+    buffer messages on the receiving worker')."""
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    cond: threading.Condition = None  # type: ignore[assignment]
+    msgs: list[tuple[int, int, int, Any]] = field(default_factory=list)
+    # each: (ctx, tag, src_world_rank, payload)
+
+    def __post_init__(self):
+        self.cond = threading.Condition(self.lock)
+
+    def put(self, ctx: int, tag: int, src: int, payload: Any) -> None:
+        with self.lock:
+            self.msgs.append((ctx, tag, src, payload))
+            self.cond.notify_all()
+
+    def get(self, ctx: int, tag: int, src: int, timeout: float) -> Any:
+        def match():
+            for i, (c, t, s, _) in enumerate(self.msgs):
+                if c == ctx and t == tag and s == src:
+                    return i
+            return None
+        # absolute deadline: unrelated arrivals wake the condition, and a
+        # per-wait timeout would restart the clock on every one of them
+        deadline = time.monotonic() + timeout
+        with self.lock:
+            i = match()
+            while i is None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self.cond.wait(timeout=remaining):
+                    raise TimeoutError(
+                        f"receive(src={src}, tag={tag}, ctx={ctx}) timed out")
+                i = match()
+            return self.msgs.pop(i)[3]
+
+
+class _CallCounter:
+    """Mutable collective-call counter. ``with_backend`` clones *share* the
+    parent's counter object: a parent and its clones are the same logical
+    communicator used sequentially, so their collectives must draw from one
+    key sequence (value-copied counters would let two steps issue identical
+    keys, and staggered ranks could then cross-match messages)."""
+    __slots__ = ("n",)
+
+    def __init__(self, n: int = 0):
+        self.n = n
+
+    def next(self) -> int:
+        self.n += 1
+        return self.n
+
+
+class MessageComm:
+    """Base communicator: the full MPIgnite API composed from matched
+    point-to-point messages (paper's ``SparkComm``). Method names keep the
+    paper's spelling alongside pythonic aliases."""
+
+    def __init__(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
+                 epoch: tuple = (), backend: str = "linear"):
+        self._group = group           # world ranks, ordered by comm rank
+        self._rank = rank_in_group
+        self._ctx = ctx
+        # epoch disambiguates successive collectives on the same communicator
+        # (each rank counts its own calls; SPMD => counts agree).
+        self._calls = _CallCounter()
+        self._epoch = epoch
+        self._backend = normalize_backend(backend)
+
+    # -- transport hooks (subclass responsibility) --------------------------
+    def _put(self, world_dst: int, ctx: int, tag: int, src_world: int,
+             payload: Any) -> None:
+        raise NotImplementedError
+
+    def _get(self, ctx: int, tag: int, src_world: int) -> Any:
+        raise NotImplementedError
+
+    def _clone(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
+               epoch: tuple) -> "MessageComm":
+        raise NotImplementedError
+
+    # -- introspection ------------------------------------------------------
+    def get_rank(self) -> int:
+        return self._rank
+
+    def get_size(self) -> int:
+        return len(self._group)
+
+    getRank = property(get_rank)   # paper spelling: world.getRank
+    getSize = property(get_size)
+
+    @property
+    def context_id(self) -> int:
+        return self._ctx
+
+    @property
+    def backend(self) -> str:
+        return self._backend
+
+    def with_backend(self, backend: str) -> "MessageComm":
+        """Same transport and group, different collective algorithm (the
+        supervisor's degrade/resume switch). The clone shares the parent's
+        call counter -- see ``_CallCounter``."""
+        clone = self._clone(self._group, self._rank, self._ctx, self._epoch)
+        clone._calls = self._calls          # shared object, not a copy
+        clone._backend = normalize_backend(backend)
+        return clone
+
+    # -- point to point -----------------------------------------------------
+    def send(self, dst: int, tag: int, data: Any) -> None:
+        """Always non-blocking (paper: 'sending in MPIgnite is always
+        nonblocking'); buffered at the receiver."""
+        self._put(self._group[dst], self._ctx, tag,
+                  self._group[self._rank], data)
+
+    def receive(self, src: int, tag: int) -> Any:
+        """Blocking receive ~ MPI_Recv."""
+        return self._get(self._ctx, tag, self._group[src])
+
+    def receive_async(self, src: int, tag: int) -> Future:
+        """Non-blocking receive ~ MPI_Irecv; returns a Future (Scala Future
+        in the paper; ``Await.result`` ~ ``future.result()`` ~ MPI_Wait)."""
+        fut: Future = Future()
+
+        def run():
+            try:
+                fut.set_result(self.receive(src, tag))
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+        threading.Thread(target=run, daemon=True).start()
+        return fut
+
+    receiveAsync = receive_async  # paper spelling
+
+    # -- collectives composed from p2p (phase-1 ``linear`` routes through
+    #    the root; phase-2 ``ring`` circulates peer-to-peer) -----------------
+    def _next_key(self) -> tuple:
+        return (*self._epoch, self._ctx, self._calls.next())
+
+    def _send_coll(self, dst: int, tag: int, key: tuple, data: Any) -> None:
+        self._put(self._group[dst], stable_ctx(self._ctx, tag, key), tag,
+                  self._group[self._rank], data)
+
+    def _recv_coll(self, src: int, tag: int, key: tuple) -> Any:
+        return self._get(stable_ctx(self._ctx, tag, key), tag,
+                         self._group[src])
+
+    def barrier(self) -> None:
+        """Message-realized barrier: gather a token at rank 0, then release
+        everyone (works over any transport, unlike threading.Barrier)."""
+        tag = -10
+        key = self._next_key()
+        p = len(self._group)
+        if self._rank == 0:
+            for r in range(1, p):
+                self._recv_coll(r, tag, key)
+            for r in range(1, p):
+                self._send_coll(r, tag, key, None)
+        else:
+            self._send_coll(0, tag, key, None)
+            self._recv_coll(0, tag, key)
+
+    def broadcast(self, root: int, data: Any = None) -> Any:
+        """comm.broadcast[T](root, data): only the root's payload matters."""
+        tag = -2  # reserved collective tag space
+        key = self._next_key()
+        p = len(self._group)
+        if self._backend == "ring":
+            # pass-along ring from root: root -> root+1 -> ... (P-1 hops)
+            if self._rank == root:
+                if p > 1:
+                    self._send_coll((root + 1) % p, tag, key, data)
+                return data
+            data = self._recv_coll((self._rank - 1) % p, tag, key)
+            if (self._rank + 1) % p != root:
+                self._send_coll((self._rank + 1) % p, tag, key, data)
+            return data
+        if self._rank == root:
+            for r in range(p):
+                if r != root:
+                    self._send_coll(r, tag, key, data)
+            return data
+        return self._recv_coll(root, tag, key)
+
+    def allreduce(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
+        """comm.allReduce[T](data, f) with an arbitrary reduction function
+        (the paper's enhancement over MPI's fixed op set).
+
+        linear (phase-1): gather to rank 0, fold in comm-rank order,
+        broadcast back -- deterministic for non-commutative ``f``.
+        ring (phase-2): circulate values around the ring, each rank folding
+        as they arrive -- ``f`` must be associative and commutative (same
+        restriction as the SPMD ring backend)."""
+        tag = -3
+        key = self._next_key()
+        p = len(self._group)
+        if p == 1:
+            return data
+        if self._backend == "ring":
+            acc, v = data, data
+            right = (self._rank + 1) % p
+            left = (self._rank - 1) % p
+            for _ in range(p - 1):
+                self._send_coll(right, tag, key, v)
+                v = self._recv_coll(left, tag, key)
+                acc = f(acc, v)
+            return acc
+        if self._rank == 0:
+            acc = data
+            for r in range(1, p):
+                acc = f(acc, self._recv_coll(r, tag, key))
+            for r in range(1, p):
+                self._send_coll(r, tag, key, acc)
+            return acc
+        self._send_coll(0, tag, key, data)
+        return self._recv_coll(0, tag, key)
+
+    def allgather(self, data: Any) -> list:
+        tag = -4
+        key = self._next_key()
+        p = len(self._group)
+        if p == 1:
+            return [data]
+        out = [None] * p
+        out[self._rank] = data
+        if self._backend == "ring":
+            right = (self._rank + 1) % p
+            left = (self._rank - 1) % p
+            v = data
+            for step in range(p - 1):
+                self._send_coll(right, tag, key, v)
+                v = self._recv_coll(left, tag, key)
+                out[(self._rank - step - 1) % p] = v
+            return out
+        if self._rank == 0:
+            for r in range(1, p):
+                out[r] = self._recv_coll(r, tag, key)
+            for r in range(1, p):
+                self._send_coll(r, tag, key, out)
+            return out
+        self._send_coll(0, tag, key, data)
+        return self._recv_coll(0, tag, key)
+
+    def reducescatter(self, chunks: Sequence[Any], f: Callable) -> Any:
+        """Each rank contributes a list of P chunks; rank i gets the f-fold
+        of everyone's chunk i."""
+        if len(chunks) != len(self._group):
+            raise ValueError("reducescatter needs one chunk per rank")
+        gathered = self.allgather(list(chunks))
+        mine = gathered[0][self._rank]
+        for contrib in gathered[1:]:
+            mine = f(mine, contrib[self._rank])
+        return mine
+
+    def reduce(self, root: int, data: Any, f: Callable[[Any, Any], Any]) -> Any:
+        """MPI_Reduce: fold everyone's data at ``root`` (None elsewhere).
+        One of the 'more methods' the paper's section 6 plans."""
+        tag = -7
+        key = self._next_key()
+        if self._rank == root:
+            acc = data
+            for r in range(len(self._group)):
+                if r != root:
+                    acc = f(acc, self._recv_coll(r, tag, key))
+            return acc
+        self._send_coll(root, tag, key, data)
+        return None
+
+    def gather(self, root: int, data: Any) -> list | None:
+        """MPI_Gather: rank-ordered list at ``root`` (None elsewhere)."""
+        tag = -8
+        key = self._next_key()
+        if self._rank == root:
+            out = [None] * len(self._group)
+            out[root] = data
+            for r in range(len(self._group)):
+                if r != root:
+                    out[r] = self._recv_coll(r, tag, key)
+            return out
+        self._send_coll(root, tag, key, data)
+        return None
+
+    def scan(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
+        """MPI_Scan: inclusive prefix reduction -- rank r receives
+        f(x_0, ..., x_r). Linear chain through the ranks."""
+        tag = -9
+        key = self._next_key()
+        if self._rank == 0:
+            acc = data
+        else:
+            acc = f(self._recv_coll(self._rank - 1, tag, key), data)
+        if self._rank + 1 < len(self._group):
+            self._send_coll(self._rank + 1, tag, key, acc)
+        return acc
+
+    def alltoall(self, chunks: Sequence[Any]) -> list:
+        if len(chunks) != len(self._group):
+            raise ValueError("alltoall needs one chunk per rank")
+        tag = -5
+        key = self._next_key()
+        for r in range(len(self._group)):
+            if r != self._rank:
+                self._send_coll(r, tag, key, chunks[r])
+        out = [None] * len(self._group)
+        out[self._rank] = chunks[self._rank]
+        for r in range(len(self._group)):
+            if r != self._rank:
+                out[r] = self._recv_coll(r, tag, key)
+        return out
+
+    # -- split (paper section 3.1: ranks send (global rank, key, color) to the
+    #    lowest participating rank; it groups by color, sorts by key, and
+    #    broadcasts the new rank mapping) ------------------------------------
+    def split(self, color: int, key: int) -> "MessageComm":
+        tag = -6
+        ckey = self._next_key()
+        root = 0
+        if self._rank == root:
+            triples = [(self._rank, key, color)]
+            for r in range(1, len(self._group)):
+                triples.append(self._recv_coll(r, tag, ckey))
+            colors = {}
+            for r, k, c in triples:
+                colors.setdefault(c, []).append((k, r))
+            mapping = {}
+            for c, members in colors.items():
+                members.sort()
+                mapping[c] = tuple(r for _, r in members)
+            for r in range(1, len(self._group)):
+                self._send_coll(r, tag, ckey, mapping)
+        else:
+            self._send_coll(root, tag, ckey, (self._rank, key, color))
+            mapping = self._recv_coll(root, tag, ckey)
+        my_group_parent_ranks = mapping[color]
+        new_group = tuple(self._group[r] for r in my_group_parent_ranks)
+        new_rank = my_group_parent_ranks.index(self._rank)
+        new_ctx = G.context_id((tuple(sorted(new_group)),), self._ctx) ^ \
+            stable_ctx(self._ctx, tag, ("split", *ckey, color)) & 0xFFFFFFFF
+        return self._clone(new_group, new_rank, new_ctx,
+                           (*self._epoch, "s", self._calls.n, color))

@@ -11,7 +11,7 @@ def _mk(shape, names):
     try:
         axis_types = (jax.sharding.AxisType.Auto,) * len(names)
         return jax.make_mesh(shape, names, axis_types=axis_types)
-    except TypeError:  # older jax
+    except (TypeError, AttributeError):  # older jax: no AxisType kwarg/enum
         return jax.make_mesh(shape, names)
 
 

@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from ..configs import get_config
+from ..core import compat
 from ..data.pipeline import Prefetcher, SyntheticTokens, make_batch
 from ..models.model import Model
 from ..parallel import axes as A
@@ -115,7 +116,7 @@ def main(argv=None):
                 for k, v in batch.items()}
             injector.check(step)
             t0 = time.time()
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 params, opt_state, metrics = step_fn(params, opt_state,
                                                      batch)
             dt = time.time() - t0

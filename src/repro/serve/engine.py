@@ -120,12 +120,10 @@ class Engine:
         self.stats.prefills += 1
         first = int(np.argmax(np.asarray(logits)[0]))
         if self.caches is None:
-            self.caches = jax.tree.map(
-                lambda c: jnp.zeros((self.max_slots,) + c.shape[1:],
-                                    c.dtype)
-                if False else self._widen(c), cache1)
-        self.caches = jax.tree.map(
-            lambda full, one: self._splice(full, one, slot),
+            self.caches = jax.tree_util.tree_map_with_path(
+                lambda path, c: self._widen(c, path), cache1)
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda path, full, one: self._splice(full, one, slot, path),
             self.caches, cache1)
         req.out_tokens.append(first)
         self.stats.tokens_out += 1
@@ -134,25 +132,29 @@ class Engine:
         self.pos[slot] = len(req.prompt)
         self.cur_tok[slot] = first
 
-    def _widen(self, c):
+    def _widen(self, c, path=()):
         """(1, ...)-batched single cache -> zeros of full slot width.
         Cache layouts carry batch at a known axis: we rely on the model's
         cache trees using batch as the axis right after any layer-stack
         dims; detection: the dim equal to 1."""
-        axis = self._batch_axis(c)
+        axis = self._batch_axis(c, path)
         shape = list(c.shape)
         shape[axis] = self.max_slots
         return jnp.zeros(shape, c.dtype)
 
-    def _splice(self, full, one, slot):
-        axis = self._batch_axis(one)
+    def _splice(self, full, one, slot, path=()):
+        axis = self._batch_axis(one, path)
         idx = [slice(None)] * one.ndim
         idx[axis] = slice(slot, slot + 1)
         return full.at[tuple(idx)].set(one)
 
     @staticmethod
-    def _batch_axis(c) -> int:
+    def _batch_axis(c, path=()) -> int:
         for i, s in enumerate(c.shape):
             if s == 1:
                 return i
-        raise ValueError(f"cannot locate batch axis in cache leaf {c.shape}")
+        leaf = jax.tree_util.keystr(path) if path else "<leaf>"
+        raise ValueError(
+            f"cannot locate batch axis in cache leaf {leaf}: no size-1 "
+            f"dimension in shape {c.shape} (prefill caches must keep the "
+            "single-request batch dim)")

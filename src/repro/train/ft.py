@@ -1,13 +1,18 @@
 """Fault-tolerance machinery: failure injection, straggler detection,
-comm-mode degradation -- the paper's section 3.1 recovery story made
-concrete for the SPMD runtime.
+comm-mode degradation -- the paper's section 3.1 recovery story.
 
 The paper proposes switching from peer-to-peer mode back to master-relay
 mode while coping with faults, then resuming peer-to-peer. Here that is a
-*backend swap on restart*: the supervisor (launch/train.py) catches a
-failure, restores the latest checkpoint, rebuilds the train step with
-``backend="linear"`` (master relay) for ``recovery_steps`` steps, then
-swaps back to the fast backend -- exercising exactly the degrade path.
+*backend swap on restart*, exercised against two failure sources:
+
+- **simulated** (SPMD runtime): the supervisor loop in ``launch/train.py``
+  catches a ``SimulatedFailure`` from ``FailureInjector``, restores the
+  latest checkpoint and rebuilds the train step with ``backend="linear"``
+  (master relay) for ``recovery_steps`` steps before swapping back;
+- **real** (cluster runtime): ``core.cluster.ClusterSupervisor`` reacts to
+  genuine executor-process death -- detected by the driver's heartbeat
+  monitor -- with the same ``RecoveryPolicy``/``SupervisorState`` schedule,
+  restoring the checkpoint and relaunching degraded executor processes.
 
 Stragglers: per-step wall time is tracked with an EWMA; a step slower
 than ``threshold`` x the EWMA marks a straggler event. In a multi-host

@@ -13,6 +13,7 @@ import numpy as np                                            # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P    # noqa: E402
 
 from repro.core import PeerComm, parallelize_func             # noqa: E402
+from repro.core import compat                                 # noqa: E402
 from repro.configs import get_config                          # noqa: E402
 from repro.models.model import Model                          # noqa: E402
 from repro.parallel import axes as A                          # noqa: E402
@@ -93,7 +94,7 @@ def check_train_step_on_mesh():
         batch = {"tokens": jax.device_put(
             tokens, NamedSharding(mesh, ps["batch"]["tokens"]))}
         ls, gn = [], []
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             for _ in range(5):
                 params, state, metrics = step(params, state, batch)
                 ls.append(float(metrics["loss"]))
@@ -130,7 +131,7 @@ def check_decode_on_mesh():
     decode = make_decode_step(model, mesh, B, s_max=s_max)
     sh = lambda t, s: jax.device_put(t, NamedSharding(mesh, s))
     _, bps = model.batch_specs(B, S)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         logits, caches = prefill(params, {"tokens": sh(
             jnp.asarray(tokens), bps["tokens"])})
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
@@ -215,7 +216,7 @@ def check_elastic_remesh_restart():
     batch = {"tokens": jax.device_put(tokens, NamedSharding(
         mesh, ps["batch"]["tokens"]))}
     losses = []
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for _ in range(3):
             params, state, metrics = step(params, state, batch)
             losses.append(float(metrics["loss"]))
@@ -234,7 +235,7 @@ def check_elastic_remesh_restart():
                  if k.startswith("opt/")}, mesh2, ps2["opt"])
     batch2 = {"tokens": jax.device_put(tokens, NamedSharding(
         mesh2, ps2["batch"]["tokens"]))}
-    with jax.set_mesh(mesh2):
+    with compat.set_mesh(mesh2):
         for _ in range(3):
             params2, state2, metrics2 = step2(params2, state2, batch2)
             losses.append(float(metrics2["loss"]))

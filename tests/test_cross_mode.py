@@ -1,0 +1,26 @@
+"""Cross-mode equivalence: the same program under threads (local),
+processes (cluster) and compiled SPMD produces identical results.
+
+Each op runs in a subprocess because the spmd leg needs 8 forced host
+devices, which must be set before jax initializes (same isolation as
+tests/test_distributed.py)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("op", ["ring_p2p", "allreduce", "allgather",
+                                "split"])
+def test_cross_mode_equivalence(op):
+    script = os.path.join(os.path.dirname(__file__), "_cross_mode_check.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, script, op], capture_output=True,
+                       text=True, timeout=280, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert f"CROSS-MODE OK {op}" in r.stdout

@@ -1,8 +1,10 @@
 """Property tests (hypothesis) for the pure rank/group machinery --
 the invariants every comm backend builds on."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import groups as G
 
