@@ -6,8 +6,18 @@ execution modes, quantifies the phase-1 (master relay) vs phase-2 (ring)
 vs native byte/step costs that section 3.1 describes qualitatively, and
 bridges to the roofline artifacts produced by the dry-run.
 
-Output: ``name,us_per_call,derived`` CSV on stdout.
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Cluster rows come in four flavors spanning the PR-2 data-plane work:
+``cold`` (a fresh executor world per call: fork + connect + address
+brokering, the PR-1 cost model) vs ``warm`` (a persistent
+``ExecutorPool``: the closure is dispatched as a job frame to live
+processes), crossed with ``relay`` (every msg frame double-hops through
+the driver, PR-1 routing) vs ``direct`` (peer-to-peer executor
+channels). The ``steadystate_speedup`` row states warm+direct against
+cold+relay -- the acceptance criterion is >= 5x.
+
+Output: ``name,us_per_call,derived`` CSV on stdout, and the same rows as
+machine-readable JSON with ``--json PATH`` (perf trajectory across PRs).
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 """
 from __future__ import annotations
 
@@ -35,13 +45,40 @@ def bench(name: str, fn, *, repeat: int = 5, derived: str = ""):
     ROWS.append((name, statistics.median(ts), derived))
 
 
+def row_value(name: str) -> float | None:
+    for n, us, _ in ROWS:
+        if n == name:
+            return us
+    return None
+
+
 # ---------------------------------------------------------------------------
-# Listings 1/2/4 on both runtime deployments: threads (paper local mode)
-# and real executor processes over the TCP transport (cluster mode).
-# Cluster rows include process spawn + connect, i.e. full job dispatch cost.
+# Listings 1/2/4 across runtime deployments: threads (paper local mode)
+# and real executor processes over the TCP transport, cold vs warm pool,
+# relay vs direct data plane.
 # ---------------------------------------------------------------------------
 
-RUNTIME_MODES = ("local", "cluster")
+def _cluster_rows(name: str, run_closure, n: int, *, planes_cold=("relay",),
+                  planes_warm=("direct",), repeat_cold=3, repeat_warm=5):
+    """Time one listing closure cold (fresh world per call, PR-1 cost
+    model) and warm (persistent pool, dispatched job) per data plane."""
+    from repro.core.cluster import ClusterFuncRDD, get_pool
+
+    for plane in planes_cold:
+        def run_cold(plane=plane):
+            run_closure(lambda fn:
+                        ClusterFuncRDD(fn, data_plane=plane).execute(n))
+        bench(f"{name}_cluster_cold_{plane}_n{n}", run_cold,
+              repeat=repeat_cold,
+              derived=f"fork+connect+broker every call ({plane} plane)")
+    for plane in planes_warm:
+        pool = get_pool(n, data_plane=plane)
+
+        def run_warm(pool=pool):
+            run_closure(pool.run)
+        bench(f"{name}_cluster_warm_{plane}_n{n}", run_warm,
+              repeat=repeat_warm,
+              derived=f"persistent pool steady state ({plane} plane)")
 
 
 def bench_listing1_matvec():
@@ -49,14 +86,16 @@ def bench_listing1_matvec():
     mat = np.arange(1, 65, dtype=np.int64).reshape(8, 8)
     vec = np.arange(8)
 
-    for mode in RUNTIME_MODES:
-        def run(mode=mode):
-            out = parallelize_func(
-                lambda w: int(mat[w.get_rank()] @ vec)
-                if w.get_rank() < 8 else 0).execute(8, mode=mode)
-            assert sum(out) == int(mat @ vec @ np.ones(8))
-        bench(f"listing1_matvec_{mode}_n8", run, repeat=3,
-              derived="incl. process spawn" if mode == "cluster" else "")
+    def closure(w):
+        return int(mat[w.get_rank()] @ vec) if w.get_rank() < 8 else 0
+
+    def check(execute):
+        assert sum(execute(closure)) == int(mat @ vec @ np.ones(8))
+
+    bench("listing1_matvec_local_n8",
+          lambda: check(lambda fn: parallelize_func(fn).execute(
+              8, mode="local")), repeat=3)
+    _cluster_rows("listing1_matvec", check, 8)
 
 
 def bench_listing2_ring(n=16):
@@ -71,12 +110,23 @@ def bench_listing2_ring(n=16):
         world.send((rank + 1) % size, 0, t)
         return t
 
-    for mode in RUNTIME_MODES:
-        def run(mode=mode):
-            assert parallelize_func(ring).execute(n, mode=mode)[0] == 42
-        bench(f"listing2_ring_{mode}_n{n}", run, repeat=3,
-              derived=f"{n} hops/round" + (
-                  " incl. process spawn" if mode == "cluster" else ""))
+    def check(execute):
+        assert execute(ring)[0] == 42
+
+    bench(f"listing2_ring_local_n{n}",
+          lambda: check(lambda fn: parallelize_func(fn).execute(
+              n, mode="local")), repeat=3, derived=f"{n} hops/round")
+    # full matrix on the paper's ring: both planes, cold and warm
+    _cluster_rows("listing2_ring", check, n,
+                  planes_cold=("relay", "direct"),
+                  planes_warm=("relay", "direct"))
+
+    cold = row_value(f"listing2_ring_cluster_cold_relay_n{n}")
+    warm = row_value(f"listing2_ring_cluster_warm_direct_n{n}")
+    if cold and warm:
+        ROWS.append((f"listing2_ring_steadystate_speedup_n{n}", 0.0,
+                     f"{cold / warm:.1f}x warm+direct vs cold+relay "
+                     "(acceptance: >=5x)"))
 
 
 def bench_listing4_2d_matvec():
@@ -93,12 +143,41 @@ def bench_listing4_2d_matvec():
         return row.allreduce(int(mat[wr // n, wr % n]) * x,
                              lambda a, b: a + b)
 
-    for mode in RUNTIME_MODES:
-        def run(mode=mode):
-            out = parallelize_func(matvec2d).execute(9, mode=mode)
-            assert out[0] == int(mat[0] @ vec)
-        bench(f"listing4_2d_matvec_{mode}_n9", run, repeat=3,
-              derived="incl. process spawn" if mode == "cluster" else "")
+    def check(execute):
+        assert execute(matvec2d)[0] == int(mat[0] @ vec)
+
+    bench("listing4_2d_matvec_local_n9",
+          lambda: check(lambda fn: parallelize_func(fn).execute(
+              9, mode="local")), repeat=3)
+    _cluster_rows("listing4_2d_matvec", check, 9)
+
+
+# ---------------------------------------------------------------------------
+# Wire codec: array payload round trip (decode copies exactly once via
+# memoryview -- this row tracks the data-plane byte-moving cost).
+# ---------------------------------------------------------------------------
+
+def bench_wire_codec(quick: bool):
+    from repro.core.cluster import wire
+    mib = 8 if quick else 64
+    arr = np.arange((mib << 20) // 8, dtype=np.float64)
+    blob = wire.encode(arr)
+
+    def roundtrip():
+        out = wire.decode(wire.encode(arr))
+        assert out.shape == arr.shape
+
+    def decode_only():
+        wire.decode(blob)
+
+    bench(f"wire_codec_roundtrip_{mib}MiB", roundtrip, repeat=5)
+    name, us, _ = ROWS[-1]
+    ROWS[-1] = (name, us, f"{2 * arr.nbytes / (us * 1e-6) / 2**30:.1f} "
+                "GiB/s enc+dec")
+    bench(f"wire_codec_decode_{mib}MiB", decode_only, repeat=5)
+    name, us, _ = ROWS[-1]
+    ROWS[-1] = (name, us, f"{arr.nbytes / (us * 1e-6) / 2**30:.1f} GiB/s; "
+                "one copy per array payload")
 
 
 def bench_figure1_api_parity():
@@ -142,6 +221,10 @@ def bench_backend_byte_model():
 def bench_spmd_backends_subprocess(quick: bool):
     """Wall-time of one 4 MiB allreduce on an 8-way SPMD mesh per backend
     (separate process: needs forced host devices)."""
+    if quick:
+        ROWS.append(("spmd_allreduce_backends", 0.0,
+                     "skipped (--quick: compile-heavy)"))
+        return
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -188,7 +271,7 @@ def bench_model_steps(quick: bool):
     axes = A.MeshAxes(1, 1, 1)
     pcfg = ParallelConfig(sequence_parallel=False, remat="none")
     ops = make_ops(axes, pcfg)
-    archs = ARCHS[:3] if quick else ARCHS
+    archs = ARCHS[:1] if quick else ARCHS
     for arch in archs:
         cfg = get_config(arch, smoke=True)
         model = Model(cfg, axes, pcfg)
@@ -273,22 +356,44 @@ def bench_roofline_bridge():
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: skip compile-heavy benches, shrink "
+                         "payloads")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON (e.g. BENCH_<date>.json) "
+                         "so the perf trajectory is tracked across PRs")
     args = ap.parse_args()
 
     bench_listing1_matvec()
     bench_listing2_ring()
     bench_listing4_2d_matvec()
     bench_figure1_api_parity()
+    bench_wire_codec(args.quick)
     bench_backend_byte_model()
     bench_spmd_backends_subprocess(args.quick)
     bench_model_steps(args.quick)
-    bench_kernels(args.quick)
+    if not args.quick:
+        bench_kernels(args.quick)
     bench_roofline_bridge()
+
+    from repro.core.cluster import shutdown_pools
+    shutdown_pools()                       # warm benchmark pools
 
     print("name,us_per_call,derived")
     for name, us, derived in ROWS:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        doc = {
+            "schema": "mpignite-bench-v1",
+            "generated": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "quick": bool(args.quick),
+            "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                     for n, us, d in ROWS],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {args.json} ({len(ROWS)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

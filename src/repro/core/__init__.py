@@ -5,6 +5,7 @@
                   collectives (``MessageComm`` base)
 - ``local``     : thread-runtime communicator (paper's local mode; oracle)
 - ``cluster``   : multi-process peer runtime over TCP (wire protocol,
+                  persistent executor pool, direct peer data channels,
                   heartbeats, checkpoint-restart supervision)
 - ``comm``      : SPMD ``PeerComm`` over mesh axes (linear/ring/native)
 - ``closures``  : ``parallelize_func(f).execute(n)`` in local, cluster or
@@ -15,7 +16,9 @@ from . import compat, groups
 from .comm import PeerComm, cost_log, cost_scope
 from .closures import (MPIgniteContext, ParallelClosure, RANK_AXIS, flat_mesh,
                        parallelize_func)
-from .cluster import ClusterComm, ClusterFuncRDD, ExecutorFailure
+from .cluster import (ClusterComm, ClusterFuncRDD, ClusterPool,
+                      ExecutorFailure, ExecutorPool, get_pool,
+                      shutdown_pools)
 from .local import LocalComm, ParallelFuncRDD
 from .matching import Mailbox, MessageComm
 
@@ -23,6 +26,7 @@ __all__ = [
     "groups", "compat", "PeerComm", "cost_log", "cost_scope",
     "MPIgniteContext", "ParallelClosure",
     "RANK_AXIS", "flat_mesh", "parallelize_func", "LocalComm",
-    "ParallelFuncRDD", "ClusterComm", "ClusterFuncRDD", "ExecutorFailure",
+    "ParallelFuncRDD", "ClusterComm", "ClusterFuncRDD", "ClusterPool",
+    "ExecutorFailure", "ExecutorPool", "get_pool", "shutdown_pools",
     "Mailbox", "MessageComm",
 ]

@@ -7,7 +7,9 @@ Three execution modes mirror Spark's deployments:
 - ``mode="cluster"`` : n genuinely separate executor *processes* joined by
   the TCP wire protocol in ``core.cluster`` -- same runtime semantics as
   local (receiver-side buffering, dynamic matching), plus heartbeat
-  failure detection and checkpoint-restart supervision.
+  failure detection and checkpoint-restart supervision. Closures are
+  dispatched as jobs to a persistent warm ``ExecutorPool`` (msg frames
+  travel direct executor-to-executor channels, not through the driver).
 - ``mode="spmd"``    : one program instance per device of a flat JAX mesh,
   compiled with ``shard_map``; the closure receives a ``PeerComm`` and its
   comm calls lower to ICI collectives. The closure's return values are
@@ -65,11 +67,16 @@ class ParallelClosure:
             return ParallelFuncRDD(self._fn, timeout=self._timeout,
                                    backend=self._backend).execute(n)
         if mode == "cluster":
-            from .cluster import ClusterFuncRDD
+            from .cluster import get_pool
             if n is None:
                 raise ValueError("cluster mode requires an instance count")
-            return ClusterFuncRDD(self._fn, timeout=self._timeout,
-                                  backend=self._backend).execute(n)
+            # warm path: repeated execute() calls reuse the cached
+            # ExecutorPool -- live processes, established peer channels --
+            # so only the first call on a given (n, backend) pays fork +
+            # connect + address brokering.
+            pool = get_pool(n, backend=self._backend)
+            return pool.run(self._fn, backend=self._backend,
+                            timeout=self._timeout)
         if mode != "spmd":
             raise ValueError(f"unknown mode {mode!r}")
         mesh = mesh if mesh is not None else flat_mesh(n)

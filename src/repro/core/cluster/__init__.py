@@ -1,19 +1,27 @@
 """Cluster transport: the paper's cluster deployment with real processes.
 
 - ``wire``       : length-prefixed frames + numpy/pytree payload codec
-- ``executor``   : executor process (mailbox over TCP, heartbeats,
+                   (decode through one memoryview -- arrays copy once)
+- ``serializer`` : closures -> bytes for pooled job dispatch
+- ``executor``   : persistent executor process (job loop, mailbox,
+                   heartbeats, direct data-plane channels,
                    ``ClusterComm``)
-- ``driver``     : ``ClusterFuncRDD`` -- spawn/route/failure-detect
-- ``supervisor`` : heartbeat-triggered checkpoint-restart recovery
+- ``driver``     : ``ExecutorPool``/``ClusterPool`` -- fork once, broker
+                   peer addresses, dispatch jobs, detect failure;
+                   ``ClusterFuncRDD`` cold-start wrapper; ``get_pool``
+                   warm-pool cache
+- ``supervisor`` : failure-triggered checkpoint-restart recovery
                    (``ClusterSupervisor``), degrading to the phase-1
                    ``linear`` backend per ``train.ft.RecoveryPolicy``
 """
 from . import wire
-from .driver import ClusterFuncRDD, ExecutorFailure
+from .driver import (ClusterFuncRDD, ClusterPool, ExecutorFailure,
+                     ExecutorPool, get_pool, shutdown_pools)
 from .executor import ClusterComm
 
-__all__ = ["wire", "ClusterFuncRDD", "ExecutorFailure", "ClusterComm",
-           "ClusterSupervisor", "RunContext"]
+__all__ = ["wire", "ClusterFuncRDD", "ClusterPool", "ExecutorFailure",
+           "ExecutorPool", "ClusterComm", "ClusterSupervisor", "RunContext",
+           "get_pool", "shutdown_pools"]
 
 
 def __getattr__(name):

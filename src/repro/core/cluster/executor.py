@@ -1,49 +1,106 @@
 """Executor side of the cluster transport.
 
-Each executor is a real OS process hosting one rank of the world. It
-dials the driver's TCP endpoint, then runs three concerns:
+Each executor is a real OS process hosting one rank of the world,
+*persistent across jobs*: it is forked once by an ``ExecutorPool``, then
+sits in a job loop receiving closures as dispatched ``job`` frames (see
+``serializer``) instead of being re-forked per ``execute()``.
 
-- a reader thread draining routed frames into the rank's matched
-  ``Mailbox`` (receiver-side buffering, exactly as in local mode);
-- a heartbeat thread announcing liveness every ``hb_interval`` seconds
-  (the driver's failure detector watches for these going quiet);
-- the main thread executing the user closure against a ``ClusterComm``
-  and shipping the return value (or traceback) back as a result frame.
+Two planes of traffic:
 
-``ClusterComm`` subclasses the transport-agnostic ``MessageComm``: a send
-writes one ``msg`` frame to the driver, which routes it to the
-destination rank's connection; collectives and ``split`` are therefore
-the same phase-1/phase-2 message compositions the thread runtime uses.
+- **control plane** (one TCP connection to the driver): ``hello``,
+  ``peers``, ``job``, ``result``, ``hb`` heartbeats, ``ctrl`` exit. The
+  driver brokers bootstrap and watches liveness here.
+- **data plane** (lazily-dialed direct TCP connections between
+  executors): every ``msg`` frame a closure sends travels peer-to-peer,
+  never touching a driver socket. Addresses come from the driver's
+  ``peers`` frame at bootstrap -- each executor opens its own data
+  listener before saying hello and advertises the port in the hello
+  frame. With ``data_plane="relay"`` the PR-1 behavior (driver routes
+  every ``msg``) is kept for comparison benchmarks and as a fallback
+  when a peer dial fails.
+
+Liveness accounts for peer traffic: data-plane reader threads count the
+bytes received per source rank and the heartbeat frame carries that
+``peer_rx`` map, so the driver can treat "a peer is receiving bytes from
+rank r" as proof that r is alive even when r's own heartbeats stall
+behind a bulk transfer.
+
+``ClusterComm`` subclasses the transport-agnostic ``MessageComm``; a
+fresh communicator is built per job with ``ctx=job id``, which isolates
+any stale matched messages a misbehaved previous job left behind.
 """
 from __future__ import annotations
 
 import os
+import queue
 import socket
 import threading
 import time
 import traceback
-from typing import Any, Callable
+from typing import Any
 
 from ..matching import Mailbox, MessageComm
 from . import wire
+from .serializer import loads_closure
 
 
 class ExecutorChannel:
-    """One rank's connection to the driver: socket + write lock + mailbox."""
+    """One rank's transport state: the control connection to the driver,
+    the data-plane listener + peer connections, and the matched mailbox
+    both planes deliver into."""
 
-    def __init__(self, sock: socket.socket, rank: int, hb_interval: float):
+    def __init__(self, sock: socket.socket, rank: int, hb_interval: float,
+                 data_plane: str = "direct",
+                 data_server: socket.socket | None = None,
+                 host: str = "127.0.0.1"):
         self.sock = sock
         self.rank = rank
+        self.host = host
+        self.data_plane = data_plane
         self.wlock = threading.Lock()
-        self.mailbox = Mailbox()
+        # one mailbox per job id: structural isolation between jobs, and
+        # a GC boundary -- stray messages a misbehaved job left behind
+        # are dropped when their job's mailbox is purged at a later
+        # dispatch (ctx isolation alone would pin them forever in a
+        # persistent executor).
+        self._mailboxes: dict[int, Mailbox] = {}
+        self._mb_lock = threading.Lock()
+        self.jobs: queue.Queue = queue.Queue()
         self.exit_requested = threading.Event()
+        self.peers_ready = threading.Event()
+        self.peer_addrs: dict[int, tuple[str, int]] = {}
+        self._peer_socks: dict[int, tuple[socket.socket, threading.Lock]] = {}
+        self._peer_lock = threading.Lock()
+        self._rx_counts: dict[int, int] = {}    # data-plane bytes per src
+        self._rx_lock = threading.Lock()
         self._hb_stop = threading.Event()
         self._hb_interval = hb_interval
+        self._data_server = data_server
+        if data_server is not None:
+            threading.Thread(target=self._accept_loop, daemon=True).start()
         self._reader = threading.Thread(target=self._read_loop, daemon=True)
         self._reader.start()
         self._hb = threading.Thread(target=self._hb_loop, daemon=True)
         self._hb.start()
 
+    # -- mailboxes ----------------------------------------------------------
+    def mailbox_for(self, job: int) -> Mailbox:
+        with self._mb_lock:
+            mb = self._mailboxes.get(job)
+            if mb is None:
+                mb = self._mailboxes[job] = Mailbox()
+            return mb
+
+    def purge_mailboxes_before(self, job: int) -> None:
+        """Free every mailbox belonging to a job older than ``job`` --
+        called at each dispatch, when no live closure can match those
+        messages anymore (a straggler's late frame merely recreates one
+        near-empty mailbox, reclaimed at the next purge)."""
+        with self._mb_lock:
+            for j in [j for j in self._mailboxes if j < job]:
+                del self._mailboxes[j]
+
+    # -- control plane ------------------------------------------------------
     def _read_loop(self):
         try:
             while True:
@@ -52,24 +109,37 @@ class ExecutorChannel:
                     break
                 header, payload = frame
                 kind = header.get("kind")
-                if kind == "msg":
-                    self.mailbox.put(header["ctx"], header["tag"],
-                                     header["src"], wire.decode(payload))
+                if kind == "msg":           # relay-routed delivery
+                    self.mailbox_for(header.get("job", 0)).put(
+                        header["ctx"], header["tag"], header["src"],
+                        wire.decode(payload))
+                elif kind == "job":
+                    self.jobs.put((header["job"], header["backend"],
+                                   header["timeout"], payload))
+                elif kind == "peers":
+                    self.peer_addrs = {int(r): (h, p) for r, (h, p)
+                                       in header["addrs"].items()}
+                    self.peers_ready.set()
                 elif kind == "ctrl" and header.get("op") == "exit":
                     break
         except (ConnectionError, OSError):
             pass
         finally:
             self.exit_requested.set()
+            self.jobs.put(None)
 
     def _hb_loop(self):
         while not self._hb_stop.wait(self._hb_interval):
             if self.exit_requested.is_set():
                 return
+            hb = {"kind": "hb", "rank": self.rank, "t": time.time()}
+            with self._rx_lock:     # peer readers insert keys concurrently
+                rx = dict(self._rx_counts)
+            if rx:
+                # vouch for peers whose data this rank is receiving
+                hb["peer_rx"] = {str(s): n for s, n in rx.items()}
             try:
-                wire.send_frame(self.sock, {"kind": "hb", "rank": self.rank,
-                                            "t": time.time()},
-                                lock=self.wlock)
+                wire.send_frame(self.sock, hb, lock=self.wlock)
             except (ConnectionError, OSError):
                 return
 
@@ -78,16 +148,123 @@ class ExecutorChannel:
         wedged executor whose process is still alive)."""
         self._hb_stop.set()
 
-    def send_msg(self, dst_world: int, ctx: int, tag: int, src_world: int,
-                 payload: Any) -> None:
-        wire.send_frame(self.sock,
-                        {"kind": "msg", "dst": dst_world, "ctx": ctx,
-                         "tag": tag, "src": src_world},
-                        wire.encode_parts(payload), lock=self.wlock)
+    # -- data plane ---------------------------------------------------------
+    def _accept_loop(self):
+        while True:
+            try:
+                conn, _ = self._data_server.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=self._peer_read_loop, args=(conn,),
+                             daemon=True).start()
 
-    def send_result(self, ok: bool, payload: list[bytes]) -> None:
+    def _peer_read_loop(self, conn: socket.socket):
+        """Drain one inbound peer connection into the mailbox, counting
+        received bytes per source so heartbeats can vouch for the peer."""
+        src = None
+
+        def on_bytes(k):
+            if src is not None:
+                with self._rx_lock:
+                    self._rx_counts[src] = self._rx_counts.get(src, 0) + k
+        try:
+            first = wire.recv_frame(conn)
+            if first is None or first[0].get("kind") != "hello":
+                conn.close()
+                return
+            src = first[0]["src"]
+            while True:
+                frame = wire.recv_frame(conn, on_bytes=on_bytes)
+                if frame is None:
+                    return
+                header, payload = frame
+                if header.get("kind") == "msg":
+                    self.mailbox_for(header.get("job", 0)).put(
+                        header["ctx"], header["tag"], header["src"],
+                        wire.decode(payload))
+        except (ConnectionError, OSError, ValueError):
+            return
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _peer_channel(self, dst: int
+                      ) -> tuple[socket.socket, threading.Lock] | None:
+        """Lazily dial the destination's data listener (full mesh grows
+        only along edges actually used). None => fall back to relay."""
+        got = self._peer_socks.get(dst)
+        if got is not None:
+            return got
+        with self._peer_lock:
+            got = self._peer_socks.get(dst)
+            if got is not None:
+                return got
+            addr = self.peer_addrs.get(dst)
+            if addr is None:
+                return None
+            try:
+                s = socket.create_connection(addr, timeout=30.0)
+            except OSError:
+                return None
+            s.settimeout(None)      # blocking sends: TCP backpressure,
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)  # not
+            wire.send_frame(s, {"kind": "hello", "src": self.rank})  # EAGAIN
+            got = (s, threading.Lock())
+            self._peer_socks[dst] = got
+            return got
+
+    def _evict_peer(self, dst: int, sock: socket.socket) -> None:
+        """Drop a failed peer connection: a frame may have been half
+        written, so the stream can never be trusted again (a later dial
+        starts a fresh connection)."""
+        with self._peer_lock:
+            if self._peer_socks.get(dst, (None,))[0] is sock:
+                del self._peer_socks[dst]
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    # -- sends --------------------------------------------------------------
+    def send_msg(self, dst_world: int, ctx: int, tag: int, src_world: int,
+                 payload: Any, job: int = 0) -> None:
+        header = {"kind": "msg", "dst": dst_world, "ctx": ctx,
+                  "tag": tag, "src": src_world, "job": job}
+        if self.data_plane == "direct":
+            if dst_world == self.rank:      # self-send: straight to mailbox
+                self.mailbox_for(job).put(ctx, tag, src_world, payload)
+                return
+            peer = self._peer_channel(dst_world)
+            if peer is not None:
+                sock, lock = peer
+                try:
+                    wire.send_frame(sock, header, wire.encode_parts(payload),
+                                    lock=lock)
+                    return
+                except (ConnectionError, OSError):
+                    # peer gone: evict the (possibly mid-frame) stream and
+                    # relay through the driver as last resort
+                    self._evict_peer(dst_world, sock)
+        wire.send_frame(self.sock, header, wire.encode_parts(payload),
+                        lock=self.wlock)
+
+    def send_result(self, job_id: int, ok: bool,
+                    payload: list[bytes]) -> None:
         wire.send_frame(self.sock, {"kind": "result", "rank": self.rank,
-                                    "ok": ok}, payload, lock=self.wlock)
+                                    "job": job_id, "ok": ok},
+                        payload, lock=self.wlock)
+
+    def close_peers(self):
+        with self._peer_lock:
+            for s, _ in self._peer_socks.values():
+                try:
+                    s.close()
+                except OSError:
+                    pass
+            self._peer_socks.clear()
 
 
 class ClusterComm(MessageComm):
@@ -95,23 +272,30 @@ class ClusterComm(MessageComm):
 
     def __init__(self, channel: ExecutorChannel, group: tuple[int, ...],
                  rank_in_group: int, ctx: int, epoch: tuple = (),
-                 backend: str = "linear", timeout: float = 60.0):
+                 backend: str = "linear", timeout: float = 60.0,
+                 job: int = 0):
         super().__init__(group, rank_in_group, ctx, epoch, backend)
         self._chan = channel
         self._timeout = timeout
+        self._job = job     # selects the job's mailbox; survives split()
 
     # -- transport ----------------------------------------------------------
     def _put(self, world_dst: int, ctx: int, tag: int, src_world: int,
              payload: Any) -> None:
-        self._chan.send_msg(world_dst, ctx, tag, src_world, payload)
+        self._chan.send_msg(world_dst, ctx, tag, src_world, payload,
+                            job=self._job)
 
     def _get(self, ctx: int, tag: int, src_world: int) -> Any:
-        return self._chan.mailbox.get(ctx, tag, src_world, self._timeout)
+        return self._chan.mailbox_for(self._job).get(ctx, tag, src_world,
+                                                     self._timeout)
 
     def _clone(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
                epoch: tuple) -> "ClusterComm":
         return ClusterComm(self._chan, group, rank_in_group, ctx, epoch,
-                           self._backend, self._timeout)
+                           self._backend, self._timeout, self._job)
+
+    def _async_mailbox(self):
+        return self._chan.mailbox_for(self._job), self._timeout
 
     # -- cluster extras -----------------------------------------------------
     @property
@@ -123,28 +307,69 @@ class ClusterComm(MessageComm):
         os._exit(exit_code)
 
 
-def executor_main(fn: Callable[[ClusterComm], Any], rank: int, size: int,
-                  port: int, backend: str, timeout: float,
-                  hb_interval: float, host: str = "127.0.0.1") -> None:
-    """Entry point of an executor process (spawned via fork, so ``fn`` may
-    be any closure -- lambdas and captured arrays included)."""
+def executor_main(rank: int, size: int, port: int, backend: str,
+                  timeout: float, hb_interval: float,
+                  data_plane: str = "direct",
+                  host: str = "127.0.0.1") -> None:
+    """Entry point of a persistent executor process.
+
+    Bootstrap: open the data listener (direct mode), dial the driver,
+    advertise ``(rank, pid, data_port)`` in the hello frame, wait for the
+    driver's brokered ``peers`` address map. Then loop: each ``job``
+    frame carries a serialized closure which runs against a fresh
+    ``ClusterComm`` (ctx = job id); the return value or traceback goes
+    back as a ``result`` frame. A job that raises does *not* kill the
+    executor -- the pool survives user exceptions.
+    """
+    data_server = None
+    data_port = None
+    if data_plane == "direct":
+        data_server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        data_server.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        data_server.bind((host, 0))
+        data_server.listen(size)
+        data_port = data_server.getsockname()[1]
+
     sock = socket.create_connection((host, port), timeout=timeout)
+    sock.settimeout(None)   # the connect timeout must NOT become a read
+    # timeout: a warm pool's control plane is legitimately quiet between
+    # jobs (heartbeats flow executor->driver only), and a timeout here
+    # would make idle executors exit and the pool self-destruct.
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    wire.send_frame(sock, {"kind": "hello", "rank": rank, "pid": os.getpid()})
-    chan = ExecutorChannel(sock, rank, hb_interval)
-    comm = ClusterComm(chan, tuple(range(size)), rank, ctx=0,
-                       backend=backend, timeout=timeout)
-    try:
-        result = fn(comm)
-        chan.send_result(True, wire.encode_parts(result))
-    except BaseException:  # noqa: BLE001 -- ship the traceback to the driver
-        try:
-            chan.send_result(False, wire.encode_parts(traceback.format_exc()))
-        except (ConnectionError, OSError):
-            pass
-        chan.exit_requested.wait(timeout)
+    wire.send_frame(sock, {"kind": "hello", "rank": rank, "pid": os.getpid(),
+                           "data_port": data_port})
+    chan = ExecutorChannel(sock, rank, hb_interval, data_plane=data_plane,
+                           data_server=data_server, host=host)
+    if data_plane == "direct" and not chan.peers_ready.wait(timeout):
         os._exit(1)
-    # Stay alive until the driver says exit: other ranks may still route
-    # messages here, and the driver owns teardown ordering.
-    chan.exit_requested.wait(timeout)
+
+    while True:
+        job = chan.jobs.get()
+        if job is None or chan.exit_requested.is_set():
+            break
+        job_id, job_backend, job_timeout, blob = job
+        chan.purge_mailboxes_before(job_id)
+        try:
+            fn = loads_closure(blob)
+        except BaseException:  # noqa: BLE001
+            try:
+                chan.send_result(job_id, False,
+                                 wire.encode_parts(traceback.format_exc()))
+            except (ConnectionError, OSError):
+                break
+            continue
+        comm = ClusterComm(chan, tuple(range(size)), rank,
+                           ctx=job_id, epoch=("j", job_id),
+                           backend=job_backend or backend,
+                           timeout=job_timeout or timeout, job=job_id)
+        try:
+            result = fn(comm)
+            chan.send_result(job_id, True, wire.encode_parts(result))
+        except BaseException:  # noqa: BLE001 -- ship traceback, keep serving
+            try:
+                chan.send_result(job_id, False,
+                                 wire.encode_parts(traceback.format_exc()))
+            except (ConnectionError, OSError):
+                break
+    chan.close_peers()
     os._exit(0)

@@ -1,0 +1,41 @@
+"""Closure serialization for pooled job dispatch.
+
+The PR-1 runtime forked a fresh executor world inside every
+``execute()``, so the closure rode into the child for free as process
+memory. A persistent ``ExecutorPool`` forks once and then receives each
+new closure as a *job frame*, which means closures must genuinely cross
+a process boundary -- lambdas, nested functions, and captured arrays
+included (the same "picklable-closure story" the ROADMAP names as a
+prerequisite for ssh-launched remote executors).
+
+``cloudpickle`` serializes code objects by value and is the standard
+answer; it is gated, not required -- without it we fall back to stdlib
+pickle, which covers module-level functions (functools.partial over
+importables, etc.) and raises a clear error for lambdas.
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Any, Callable
+
+try:
+    import cloudpickle as _cp
+except ImportError:            # pragma: no cover - container ships it
+    _cp = None
+
+
+def dumps_closure(fn: Callable) -> bytes:
+    if _cp is not None:
+        return _cp.dumps(fn)
+    try:
+        return pickle.dumps(fn)
+    except (pickle.PicklingError, AttributeError, TypeError) as e:
+        raise TypeError(
+            "cannot ship this closure to pooled executors: cloudpickle is "
+            "unavailable and stdlib pickle only handles module-level "
+            f"functions ({e})") from e
+
+
+def loads_closure(blob: bytes | bytearray | memoryview) -> Any:
+    # cloudpickle output is plain pickle data; stdlib loads either.
+    return pickle.loads(bytes(blob))

@@ -1,7 +1,7 @@
 """Checkpoint-restart supervision for the cluster runtime.
 
-This is the paper's section-3.1 fault story made real: the driver's
-heartbeat monitor declares a rank dead (``ExecutorFailure``), the
+This is the paper's section-3.1 fault story made real: the pool's
+failure detector declares a rank dead (``ExecutorFailure``), the
 supervisor restores the latest checkpoint, relaunches the world with the
 degraded phase-1 ``linear`` backend for ``recovery_steps`` steps (master
 relay is the mode the paper falls back to while coping with faults), and
@@ -9,11 +9,19 @@ then the workload resumes the fast peer-to-peer backend -- all driven by
 the very same ``RecoveryPolicy``/``SupervisorState`` machinery
 ``train.ft`` previously exercised only against *simulated* failures.
 
-The workload contract is step-structured: the caller provides
-``make_closure(run) -> fn(comm)`` where ``run`` tells the closure where
-to resume and which backend each step must use. Inside the closure,
-``run.comm_for(comm, step)`` applies the degrade schedule and rank 0
-persists state with ``run.save(step, state)``.
+Two workload shapes:
+
+- ``run(make_closure, n)``: one closure owns the whole step loop (the
+  PR-1 contract). Each attempt gets a fresh ``ExecutorPool``; a failure
+  discards it and relaunches from the latest checkpoint.
+- ``run_steps(make_step, n, total_steps)``: each step is its own pooled
+  job, so the *same* warm executors serve every step -- and a rank that
+  dies **between** jobs (SIGKILL while the pool idles) is caught at the
+  next dispatch, checkpoint-restarted exactly like a mid-job death.
+
+The closure contract is unchanged: ``run.comm_for(comm, step)`` applies
+the degrade schedule and rank 0 persists state with
+``run.save(step, state)``.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ import time
 from typing import Any, Callable
 
 from ...train import ft
-from .driver import ClusterFuncRDD, ExecutorFailure
+from .driver import ExecutorFailure, ExecutorPool
 
 
 @dataclasses.dataclass
@@ -59,7 +67,7 @@ class RunContext:
 
 @dataclasses.dataclass
 class ClusterSupervisor:
-    """Relaunch-from-checkpoint loop above ``ClusterFuncRDD``."""
+    """Relaunch-from-checkpoint loop above ``ExecutorPool``."""
     ckpt_dir: str
     policy: ft.RecoveryPolicy = dataclasses.field(
         default_factory=ft.RecoveryPolicy)
@@ -68,6 +76,7 @@ class ClusterSupervisor:
     hb_interval: float = 0.1
     hb_timeout: float = 1.0
     restart_delay: float = 0.0
+    data_plane: str = "direct"
 
     def __post_init__(self):
         self.state = ft.SupervisorState()
@@ -77,34 +86,93 @@ class ClusterSupervisor:
         from ...train import checkpoint as CKPT
         return CKPT.latest_step(self.ckpt_dir) or 0
 
+    def _make_pool(self, n: int) -> ExecutorPool:
+        return ExecutorPool(n, backend=self.fast_backend,
+                            timeout=self.timeout,
+                            data_plane=self.data_plane,
+                            hb_interval=self.hb_interval,
+                            hb_timeout=self.hb_timeout)
+
+    def _run_ctx(self, start: int, attempt: int) -> RunContext:
+        return RunContext(
+            ckpt_dir=self.ckpt_dir,
+            start_step=start,
+            attempt=attempt,
+            degraded_until=self.state.degraded_until,
+            fast_backend=self.fast_backend,
+            degrade_backend=self.policy.degrade_backend)
+
+    def _on_failure(self, e: ExecutorFailure) -> None:
+        restart_step = self._latest_step()
+        self.failures.append((restart_step, e.reason))
+        # raises once policy.max_restarts is exhausted
+        self.state.on_failure(restart_step, self.policy)
+        if self.restart_delay:
+            time.sleep(self.restart_delay)
+
     def run(self, make_closure: Callable[[RunContext], Callable], n: int,
             ) -> list[Any]:
-        """Run ``make_closure(run_ctx)`` across ``n`` executor processes,
+        """Run ``make_closure(run_ctx)`` across ``n`` pooled executors,
         restarting from the latest checkpoint on executor death until the
         closure completes or ``policy.max_restarts`` is exhausted."""
         attempt = 0
         while True:
             start = self._latest_step()
-            run_ctx = RunContext(
-                ckpt_dir=self.ckpt_dir,
-                start_step=start,
-                attempt=attempt,
-                degraded_until=self.state.degraded_until,
-                fast_backend=self.fast_backend,
-                degrade_backend=self.policy.degrade_backend)
+            run_ctx = self._run_ctx(start, attempt)
             # every launch starts in the backend the schedule dictates
             launch_backend = run_ctx.backend_for(start + 1)
-            rdd = ClusterFuncRDD(make_closure(run_ctx), timeout=self.timeout,
-                                 backend=launch_backend,
-                                 hb_interval=self.hb_interval,
-                                 hb_timeout=self.hb_timeout)
+            pool = None
             try:
-                return rdd.execute(n)
+                pool = self._make_pool(n)   # spawn failure also restarts
+                return pool.run(make_closure(run_ctx),
+                                backend=launch_backend)
             except ExecutorFailure as e:
-                restart_step = self._latest_step()
-                self.failures.append((restart_step, e.reason))
-                # raises once policy.max_restarts is exhausted
-                self.state.on_failure(restart_step, self.policy)
+                self._on_failure(e)
                 attempt += 1
-                if self.restart_delay:
-                    time.sleep(self.restart_delay)
+            finally:
+                if pool is not None:
+                    pool.shutdown()
+
+    def run_steps(self, make_step: Callable[[RunContext, int], Callable],
+                  n: int, total_steps: int,
+                  on_step: Callable[[int, ExecutorPool], None] | None = None,
+                  ) -> list[Any]:
+        """Run ``make_step(run_ctx, step)`` as one pooled job per step,
+        keeping the same warm pool across steps. ``on_step(step, pool)``
+        is an instrumentation hook invoked after each completed step --
+        tests use it to injure the pool *between* jobs. Returns the final
+        step's per-rank results."""
+        pool: ExecutorPool | None = None
+        attempt = 0
+        try:
+            while True:
+                start = self._latest_step()
+                run_ctx = self._run_ctx(start, attempt)
+                try:
+                    if pool is None or pool.broken or pool.closed:
+                        if pool is not None:
+                            pool.shutdown()
+                        pool = self._make_pool(n)
+                    outs: list[Any] = []
+                    for step in range(start + 1, total_steps + 1):
+                        outs = pool.run(make_step(run_ctx, step),
+                                        backend=run_ctx.backend_for(step))
+                        if on_step is not None:
+                            on_step(step, pool)
+                    if not outs and total_steps > 0:
+                        # resume landed past the final step: its ckpt was
+                        # saved but its result frames were lost to the
+                        # failure. Surface that loudly -- re-running the
+                        # step would double-apply its state update.
+                        raise RuntimeError(
+                            "final step's results were lost to a failure "
+                            "after its checkpoint was saved; state is "
+                            "recoverable from the checkpoint but per-rank "
+                            "return values are not")
+                    return outs
+                except ExecutorFailure as e:
+                    self._on_failure(e)
+                    attempt += 1
+        finally:
+            if pool is not None:
+                pool.shutdown()

@@ -15,8 +15,10 @@ The payload codec handles the three shapes the communicator API admits:
 - anything else falls back to a pickle buffer.
 
 Encoded layout: ``[4B manifest len][JSON manifest][buffer 0][buffer 1]...``
-with every buffer's length recorded in the manifest, so decode is a single
-pass of zero-copy ``np.frombuffer`` slices.
+with every buffer's length recorded in the manifest. Decode walks one
+``memoryview`` over the frame -- slicing a memoryview is zero-copy, so an
+array payload is materialized by exactly one copy (the ``.copy()`` that
+gives the caller a writable array independent of the receive buffer).
 """
 from __future__ import annotations
 
@@ -86,9 +88,10 @@ def encode(obj: Any) -> bytes:
     return b"".join(encode_parts(obj))
 
 
-def decode(data: bytes) -> Any:
-    (mlen,) = _MLEN.unpack_from(data, 0)
-    manifest = json.loads(data[_MLEN.size:_MLEN.size + mlen])
+def decode(data: bytes | bytearray | memoryview) -> Any:
+    mv = memoryview(data)
+    (mlen,) = _MLEN.unpack_from(mv, 0)
+    manifest = json.loads(bytes(mv[_MLEN.size:_MLEN.size + mlen]))
     pos = _MLEN.size + mlen
 
     def dec(node):
@@ -96,10 +99,10 @@ def decode(data: bytes) -> Any:
         t = node["t"]
         if t == "nd":
             n = node["n"]
-            raw = data[pos:pos + n]
+            raw = mv[pos:pos + n]        # memoryview slice: no copy
             pos += n
             arr = np.frombuffer(raw, dtype=_dtype_from_name(node["d"]))
-            return arr.reshape(node["s"]).copy()
+            return arr.reshape(node["s"]).copy()   # the one copy
         if t == "np":
             return _dtype_from_name(node["d"]).type(node["v"])
         if t == "py":
@@ -112,7 +115,7 @@ def decode(data: bytes) -> Any:
             return {k: dec(v) for k, v in zip(node["k"], node["v"])}
         if t == "pkl":
             n = node["n"]
-            raw = data[pos:pos + n]
+            raw = mv[pos:pos + n]
             pos += n
             return pickle.loads(raw)
         raise ValueError(f"bad manifest node type {t!r}")
@@ -147,28 +150,33 @@ def send_frame(sock: socket.socket, header: dict,
         write()
 
 
-def recv_exact(sock: socket.socket, n: int, on_bytes=None) -> bytes | None:
-    """Read exactly n bytes; None on clean EOF at a frame boundary.
+def recv_exact(sock: socket.socket, n: int, on_bytes=None
+               ) -> bytearray | None:
+    """Read exactly n bytes into one preallocated buffer; None on clean
+    EOF at a frame boundary. ``recv_into`` writes straight into the
+    buffer, so there is no per-chunk bytes object and no final join copy.
     ``on_bytes(k)`` fires per chunk -- failure detectors use it to treat
     in-flight bulk transfers as proof of liveness."""
-    chunks: list[bytes] = []
+    buf = bytearray(n)
+    view = memoryview(buf)
     got = 0
     while got < n:
-        chunk = sock.recv(min(n - got, 1 << 20))
-        if not chunk:
+        k = sock.recv_into(view[got:], min(n - got, 1 << 20))
+        if k == 0:
             if got == 0:
                 return None
             raise ConnectionError("connection closed mid-frame")
-        chunks.append(chunk)
-        got += len(chunk)
+        got += k
         if on_bytes is not None:
-            on_bytes(len(chunk))
-    return b"".join(chunks)
+            on_bytes(k)
+    return buf
 
 
 def recv_frame(sock: socket.socket, on_bytes=None
-               ) -> tuple[dict, bytes] | None:
-    """Read one frame; None on EOF."""
+               ) -> tuple[dict, bytes | bytearray] | None:
+    """Read one frame; None on EOF. The payload is the receive buffer
+    itself (a bytearray) -- ``decode`` reads it through a memoryview, so
+    array payloads incur exactly one copy end to end."""
     head = recv_exact(sock, _HDR.size)
     if head is None:
         return None
@@ -178,8 +186,8 @@ def recv_frame(sock: socket.socket, on_bytes=None
     h = recv_exact(sock, hlen)
     if h is None:
         raise ConnectionError("connection closed mid-frame")
-    header = json.loads(h)
-    payload = b""
+    header = json.loads(bytes(h))
+    payload: bytes | bytearray = b""
     if plen:
         p = recv_exact(sock, plen, on_bytes)
         if p is None:

@@ -64,6 +64,10 @@ class LocalComm(MessageComm):
         return LocalComm(self._world, group, rank_in_group, ctx, epoch,
                          self._backend)
 
+    def _async_mailbox(self):
+        me = self._group[self._rank]
+        return self._world.mailboxes[me], self._world.timeout
+
 
 class ParallelFuncRDD:
     """Return type of ``parallelize_func`` in local mode -- mirrors the

@@ -11,9 +11,10 @@ Two transports plug in underneath:
 
 - ``local.LocalComm``      : in-process delivery between worker threads
   (the paper's local deployment; the semantic oracle).
-- ``cluster.ClusterComm``  : length-prefixed TCP frames routed through
-  the driver between genuinely separate executor processes (the paper's
-  cluster deployment).
+- ``cluster.ClusterComm``  : length-prefixed TCP frames on direct
+  executor-to-executor channels (or relayed through the driver) between
+  genuinely separate executor processes (the paper's cluster
+  deployment).
 
 A subclass provides three hooks: ``_put`` (deliver a payload to a world
 rank's mailbox), ``_get`` (matched receive from this rank's own mailbox)
@@ -23,9 +24,13 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import heapq
+import itertools
+import os
 import threading
 import time
-from concurrent.futures import Future
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -60,41 +65,179 @@ def stable_ctx(ctx: int, tag: int, key: tuple) -> int:
     return int.from_bytes(h, "big")
 
 
+_DELIVER: tuple[int, ThreadPoolExecutor] | None = None
+_DELIVER_LOCK = threading.Lock()
+
+
+def _deliver_pool() -> ThreadPoolExecutor:
+    """One shared worker that completes async-receive Futures, so user
+    done-callbacks never run on (and never stall) a transport reader
+    thread. Keyed by pid: a forked child would otherwise inherit an
+    executor whose worker thread does not exist."""
+    global _DELIVER
+    with _DELIVER_LOCK:
+        if _DELIVER is None or _DELIVER[0] != os.getpid():
+            _DELIVER = (os.getpid(), ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="mailbox-deliver"))
+        return _DELIVER[1]
+
+
+class _Waiter:
+    """One pending ``receive_async``: a Future registered on a mailbox key.
+    Claiming (under the mailbox lock) decides exactly one outcome --
+    delivery by ``Mailbox.put`` or expiry by the shared ``_Expiry``
+    thread -- so the two can never both complete the Future."""
+    __slots__ = ("mailbox", "key", "fut", "deadline", "claimed")
+
+    def __init__(self, mailbox: "Mailbox", key: tuple, fut: Future,
+                 deadline: float):
+        self.mailbox = mailbox
+        self.key = key
+        self.fut = fut
+        self.deadline = deadline
+        self.claimed = False
+
+    def expire(self) -> None:
+        with self.mailbox.lock:
+            if self.claimed:
+                return
+            self.claimed = True
+            dq = self.mailbox.waiters.get(self.key)
+            if dq is not None:
+                try:
+                    dq.remove(self)
+                except ValueError:
+                    pass
+                if not dq:
+                    del self.mailbox.waiters[self.key]
+        ctx, tag, src = self.key
+        _deliver_pool().submit(self.fut.set_exception, TimeoutError(
+            f"receive(src={src}, tag={tag}, ctx={ctx}) timed out"))
+
+
+class _Expiry(threading.Thread):
+    """Single shared timer servicing every async waiter's deadline -- the
+    'small shared waiter pool' that replaces thread-per-``receive_async``.
+    One daemon thread per process, started on first use."""
+
+    _instance: "_Expiry | None" = None
+    _instance_lock = threading.Lock()
+
+    def __init__(self):
+        super().__init__(daemon=True, name="mailbox-expiry")
+        self.cond = threading.Condition()
+        self.heap: list[tuple[float, int, _Waiter]] = []
+        self.seq = itertools.count()
+
+    @classmethod
+    def instance(cls) -> "_Expiry":
+        with cls._instance_lock:
+            if cls._instance is None or not cls._instance.is_alive():
+                cls._instance = cls()
+                cls._instance.start()
+            return cls._instance
+
+    def add(self, waiter: _Waiter) -> None:
+        with self.cond:
+            heapq.heappush(self.heap, (waiter.deadline, next(self.seq),
+                                       waiter))
+            self.cond.notify()
+
+    def run(self) -> None:
+        while True:
+            with self.cond:
+                while not self.heap:
+                    self.cond.wait()
+                deadline, _, waiter = self.heap[0]
+                now = time.monotonic()
+                if waiter.claimed:
+                    heapq.heappop(self.heap)
+                    continue
+                if now < deadline:
+                    self.cond.wait(deadline - now)
+                    continue
+                heapq.heappop(self.heap)
+            waiter.expire()     # outside our cond; takes the mailbox lock
+
+
 @dataclass
 class Mailbox:
     """Receiver-side buffering: unmatched messages wait here (paper: 'we
-    buffer messages on the receiving worker')."""
+    buffer messages on the receiving worker'). Messages are indexed by
+    their full ``(ctx, tag, src)`` match key -- put/get are O(1) dict
+    operations, not a scan of every buffered message -- with a deque per
+    key preserving arrival order for same-key messages."""
     lock: threading.Lock = field(default_factory=threading.Lock)
     cond: threading.Condition = None  # type: ignore[assignment]
-    msgs: list[tuple[int, int, int, Any]] = field(default_factory=list)
-    # each: (ctx, tag, src_world_rank, payload)
+    queues: dict[tuple[int, int, int], deque] = field(default_factory=dict)
+    waiters: dict[tuple[int, int, int], deque] = field(default_factory=dict)
 
     def __post_init__(self):
         self.cond = threading.Condition(self.lock)
 
     def put(self, ctx: int, tag: int, src: int, payload: Any) -> None:
+        key = (ctx, tag, src)
+        deliver: _Waiter | None = None
         with self.lock:
-            self.msgs.append((ctx, tag, src, payload))
-            self.cond.notify_all()
+            dq = self.waiters.get(key)
+            while dq:
+                w = dq.popleft()
+                if not dq:
+                    del self.waiters[key]
+                if not w.claimed:
+                    w.claimed = True
+                    deliver = w
+                    break
+            if deliver is None:
+                self.queues.setdefault(key, deque()).append(payload)
+                self.cond.notify_all()
+        if deliver is not None:
+            # complete on the shared delivery worker, not this (possibly
+            # transport-reader) thread: user done-callbacks may block or
+            # re-enter the mailbox
+            _deliver_pool().submit(deliver.fut.set_result, payload)
 
     def get(self, ctx: int, tag: int, src: int, timeout: float) -> Any:
-        def match():
-            for i, (c, t, s, _) in enumerate(self.msgs):
-                if c == ctx and t == tag and s == src:
-                    return i
-            return None
+        key = (ctx, tag, src)
         # absolute deadline: unrelated arrivals wake the condition, and a
         # per-wait timeout would restart the clock on every one of them
         deadline = time.monotonic() + timeout
         with self.lock:
-            i = match()
-            while i is None:
+            while True:
+                q = self.queues.get(key)
+                if q:
+                    payload = q.popleft()
+                    if not q:
+                        del self.queues[key]
+                    return payload
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self.cond.wait(timeout=remaining):
                     raise TimeoutError(
                         f"receive(src={src}, tag={tag}, ctx={ctx}) timed out")
-                i = match()
-            return self.msgs.pop(i)[3]
+
+    def get_async(self, ctx: int, tag: int, src: int,
+                  timeout: float) -> Future:
+        """Matched receive as a Future, without dedicating a thread to the
+        wait: if the message is buffered the Future completes immediately;
+        otherwise a ``_Waiter`` is registered and ``put`` completes it on
+        arrival (the shared ``_Expiry`` thread enforces the deadline)."""
+        key = (ctx, tag, src)
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        with self.lock:
+            q = self.queues.get(key)
+            if q:
+                payload = q.popleft()
+                if not q:
+                    del self.queues[key]
+            else:
+                w = _Waiter(self, key, fut,
+                            time.monotonic() + timeout)
+                self.waiters.setdefault(key, deque()).append(w)
+                _Expiry.instance().add(w)
+                return fut
+        fut.set_result(payload)
+        return fut
 
 
 class _CallCounter:
@@ -141,6 +284,12 @@ class MessageComm:
                epoch: tuple) -> "MessageComm":
         raise NotImplementedError
 
+    def _async_mailbox(self) -> tuple["Mailbox", float] | None:
+        """(this rank's mailbox, receive timeout) when the transport is
+        mailbox-backed -- lets ``receive_async`` register a waiter instead
+        of parking a thread. None => thread-per-call fallback."""
+        return None
+
     # -- introspection ------------------------------------------------------
     def get_rank(self) -> int:
         return self._rank
@@ -181,7 +330,19 @@ class MessageComm:
 
     def receive_async(self, src: int, tag: int) -> Future:
         """Non-blocking receive ~ MPI_Irecv; returns a Future (Scala Future
-        in the paper; ``Await.result`` ~ ``future.result()`` ~ MPI_Wait)."""
+        in the paper; ``Await.result`` ~ ``future.result()`` ~ MPI_Wait).
+
+        Mailbox-backed transports service the Future by waiter
+        registration on the mailbox itself -- ``Mailbox.put`` completes it
+        on arrival and one shared expiry thread enforces the deadline --
+        so issuing many concurrent async receives costs zero extra
+        threads. Transports without a mailbox fall back to a helper
+        thread per call."""
+        mb = self._async_mailbox()
+        if mb is not None:
+            mailbox, timeout = mb
+            return mailbox.get_async(self._ctx, tag, self._group[src],
+                                     timeout)
         fut: Future = Future()
 
         def run():

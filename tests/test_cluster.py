@@ -1,13 +1,19 @@
 """Cluster transport: wire codec, multi-process equivalence with the
-thread oracle, heartbeat failure detection, and checkpoint-restart
-recovery (the paper's section-3.1 fault story against *real* process
-death, not simulation)."""
+thread oracle, the persistent executor pool + direct data plane,
+heartbeat failure detection, and checkpoint-restart recovery (the
+paper's section-3.1 fault story against *real* process death, not
+simulation)."""
+import os
+import signal
+import time
+
 import numpy as np
 import pytest
 
 from repro.core import parallelize_func
-from repro.core.cluster import (ClusterFuncRDD, ClusterSupervisor,
-                                ExecutorFailure, wire)
+from repro.core.cluster import (ClusterFuncRDD, ClusterPool,
+                                ClusterSupervisor, ExecutorFailure,
+                                ExecutorPool, get_pool, wire)
 from repro.train import ft
 
 
@@ -269,6 +275,158 @@ def test_supervisor_kill_restart_recovery(tmp_path):
             for s in range(restart_from + 1, total + 1)]
     assert backends == want
     assert "ring" in backends and "linear" in backends
+
+
+# ---------------------------------------------------------------------------
+# Persistent executor pool + direct data plane
+# ---------------------------------------------------------------------------
+
+def test_pool_warm_reuse_same_processes():
+    """Executors survive across run() calls: the second job is dispatched
+    to the same live processes, not a re-forked world."""
+    with ClusterPool(3) as pool:
+        pids = pool.pids
+        out1 = pool.run(lambda c: c.allgather(c.get_rank()))
+        out2 = pool.run(
+            lambda c: float(c.allreduce(np.float64(1.0), lambda a, b: a + b)),
+            backend="ring")
+        assert pool.pids == pids
+    assert out1 == [[0, 1, 2]] * 3
+    assert out2 == [3.0] * 3
+
+
+@pytest.mark.timeout(60)
+def test_pool_survives_idle_beyond_connect_timeout():
+    """The connect timeout must not become a control-socket read
+    timeout: a warm pool's control plane is legitimately quiet between
+    jobs (heartbeats flow executor->driver only), so executors must not
+    exit while the pool idles."""
+    with ClusterPool(2, timeout=3) as pool:
+        assert pool.run(lambda c: c.get_rank()) == [0, 1]
+        time.sleep(4.5)                       # idle > connect timeout
+        assert pool.run(lambda c: c.get_rank() + 1) == [1, 2]
+
+
+def test_direct_data_plane_bypasses_driver():
+    """The acceptance property: a p2p payload between two executors
+    traverses zero driver sockets. The driver counts every frame it
+    sees; in direct mode no 'msg' frame may appear there, while relay
+    mode (the PR-1 behavior) routes every one through it."""
+    payload = np.arange(1 << 16, dtype=np.float64)        # 512 KiB
+
+    def closure(world):
+        if world.get_rank() == 0:
+            world.send(1, 7, payload)
+            return 0.0
+        return float(world.receive(0, 7).sum())
+
+    with ExecutorPool(2, data_plane="direct") as pool:
+        out = pool.run(closure)
+        assert out[1] == float(payload.sum())
+        assert pool.frame_counts.get("msg", 0) == 0, pool.frame_counts
+
+    with ExecutorPool(2, data_plane="relay") as pool:
+        out = pool.run(closure)
+        assert out[1] == float(payload.sum())
+        assert pool.frame_counts.get("msg", 0) >= 1
+
+
+def test_pool_survives_job_exception():
+    """A closure error is a job failure, not a pool failure: the
+    traceback propagates and the same pool serves the next job -- even a
+    short-deadline one, because dispatch first drains the straggler rank
+    still blocked in the errored job's closure."""
+    def bad(world):
+        if world.get_rank() == 1:
+            raise ValueError("job boom")
+        return world.receive(1, 0)      # straggler: blocks to job timeout
+
+    with ClusterPool(2, timeout=30) as pool:
+        with pytest.raises(RuntimeError, match="job boom"):
+            pool.run(bad, timeout=3)
+        assert not pool.broken
+        assert pool.run(lambda c: c.get_rank(), timeout=5) == [0, 1]
+        assert not pool.broken
+
+
+def test_pool_rejects_jobs_after_rank_death():
+    """Rank death breaks the pool: the failing run raises
+    ExecutorFailure and later dispatches are refused."""
+    def die0(world):
+        if world.get_rank() == 0:
+            world.die()
+        world.barrier()
+
+    pool = ExecutorPool(2, timeout=30, hb_interval=0.05, hb_timeout=0.5)
+    try:
+        with pytest.raises(ExecutorFailure):
+            pool.run(die0)
+        assert pool.broken
+        with pytest.raises(ExecutorFailure):
+            pool.run(lambda c: c.get_rank())
+    finally:
+        pool.shutdown()
+
+
+def test_warm_pool_cache_replaces_broken_pool():
+    """get_pool hands back the cached live pool, and transparently
+    replaces one that a failure broke."""
+    p1 = get_pool(2, backend="linear")
+    assert get_pool(2, backend="linear") is p1
+
+    def die0(world):
+        if world.get_rank() == 0:
+            world.die()
+        world.barrier()
+
+    with pytest.raises(ExecutorFailure):
+        p1.run(die0, timeout=30)
+    p2 = get_pool(2, backend="linear")
+    assert p2 is not p1
+    assert p2.run(lambda c: c.get_rank()) == [0, 1]
+
+
+@pytest.mark.timeout(120)
+def test_pool_sigkill_between_jobs_supervisor_recovery(tmp_path):
+    """Failure *between* pooled jobs: an executor is SIGKILLed while the
+    pool idles between two run() calls. The next dispatch detects the
+    dead rank, and the supervisor's checkpoint-restart path recovers on
+    a fresh pool -- degraded backend first, then the fast one."""
+    total, n, kill_after = 8, 3, 4
+    killed = []
+
+    def make_step(run, step):
+        def closure(comm):
+            rank = comm.get_rank()
+            restored = run.restore()
+            acc = 0.0 if restored is None else float(restored[0]["acc"][0])
+            acc += float(comm.allreduce(np.float64(rank * step),
+                                        lambda a, b: a + b))
+            if rank == 0:
+                run.save(step, {"acc": np.array([acc])})
+            return acc, comm.backend
+        return closure
+
+    def on_step(step, pool):
+        if step == kill_after and not killed:
+            killed.append(pool.pids[1])
+            os.kill(pool.pids[1], signal.SIGKILL)
+            time.sleep(0.2)        # let the OS reap / EOF propagate
+
+    policy = ft.RecoveryPolicy(degrade_backend="linear", recovery_steps=2,
+                               max_restarts=3)
+    sup = ClusterSupervisor(str(tmp_path), policy=policy,
+                            fast_backend="ring", timeout=30,
+                            hb_interval=0.05, hb_timeout=0.8)
+    out = sup.run_steps(make_step, n, total, on_step=on_step)
+
+    assert killed and sup.state.restarts == 1
+    assert len(sup.failures) == 1
+    assert sup.failures[0][0] == kill_after       # restart from step 4 ckpt
+    expect = float(sum(step * sum(range(n)) for step in range(1, total + 1)))
+    for acc, backend in out:
+        assert acc == expect
+        assert backend == "ring"                  # recovered past degrade
 
 
 def test_supervisor_restart_budget(tmp_path):

@@ -1,0 +1,122 @@
+"""Matched mailbox internals: dict-indexed buffering, deadline
+semantics, and thread-free ``receive_async`` waiter registration."""
+import threading
+import time
+
+import pytest
+
+from repro.core import parallelize_func
+from repro.core.matching import Mailbox
+
+
+# ---------------------------------------------------------------------------
+# Mailbox: dict-of-deques buffering
+# ---------------------------------------------------------------------------
+
+def test_mailbox_match_is_keyed_and_fifo_per_key():
+    mb = Mailbox()
+    mb.put(0, 1, 2, "a")
+    mb.put(0, 1, 2, "b")          # same key: arrival order preserved
+    mb.put(0, 9, 2, "other-tag")
+    mb.put(7, 1, 2, "other-ctx")
+    assert mb.get(0, 1, 2, timeout=1.0) == "a"
+    assert mb.get(0, 1, 2, timeout=1.0) == "b"
+    assert mb.get(0, 9, 2, timeout=1.0) == "other-tag"
+    assert mb.get(7, 1, 2, timeout=1.0) == "other-ctx"
+    assert not mb.queues              # fully drained: no empty deques leak
+
+
+def test_mailbox_get_timeout_is_absolute_deadline():
+    """Unrelated arrivals wake the condition but must not restart the
+    clock: the deadline is absolute."""
+    mb = Mailbox()
+    stop = threading.Event()
+
+    def noise():
+        while not stop.is_set():
+            mb.put(0, 0, 99, None)        # wrong src: never matches
+            time.sleep(0.02)
+
+    t = threading.Thread(target=noise, daemon=True)
+    t.start()
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError, match="src=1, tag=0"):
+        mb.get(0, 0, 1, timeout=0.3)
+    elapsed = time.monotonic() - t0
+    stop.set()
+    t.join()
+    assert 0.25 <= elapsed < 2.0
+
+
+def test_mailbox_blocking_get_wakes_on_arrival():
+    mb = Mailbox()
+
+    def later():
+        time.sleep(0.05)
+        mb.put(1, 2, 3, "payload")
+    threading.Thread(target=later, daemon=True).start()
+    assert mb.get(1, 2, 3, timeout=5.0) == "payload"
+
+
+# ---------------------------------------------------------------------------
+# receive_async: waiter registration, not thread-per-call
+# ---------------------------------------------------------------------------
+
+def test_get_async_immediate_and_deferred():
+    mb = Mailbox()
+    mb.put(0, 0, 1, "ready")
+    fut = mb.get_async(0, 0, 1, timeout=1.0)
+    assert fut.result(timeout=0) == "ready"      # already buffered
+
+    fut = mb.get_async(0, 0, 2, timeout=5.0)     # registered waiter
+    assert not fut.done()
+    mb.put(0, 0, 2, "later")
+    assert fut.result(timeout=1.0) == "later"
+    assert not mb.waiters                        # waiter consumed
+
+
+def test_get_async_timeout_sets_exception():
+    mb = Mailbox()
+    fut = mb.get_async(0, 5, 1, timeout=0.2)
+    with pytest.raises(TimeoutError, match="tag=5"):
+        fut.result(timeout=5.0)
+    # an expired waiter must not swallow a late message
+    mb.put(0, 5, 1, "late")
+    assert mb.get(0, 5, 1, timeout=1.0) == "late"
+
+
+def test_get_async_fifo_among_waiters():
+    mb = Mailbox()
+    f1 = mb.get_async(0, 0, 1, timeout=5.0)
+    f2 = mb.get_async(0, 0, 1, timeout=5.0)
+    mb.put(0, 0, 1, "first")
+    mb.put(0, 0, 1, "second")
+    assert f1.result(timeout=1.0) == "first"
+    assert f2.result(timeout=1.0) == "second"
+
+
+@pytest.mark.timeout(60)
+def test_receive_async_stress_100_concurrent():
+    """100 concurrent receive_async calls are serviced by waiter
+    registration + one shared expiry thread -- not 100 parked threads."""
+    N = 100
+    before = threading.active_count()
+
+    def closure(world):
+        rank = world.get_rank()
+        if rank == 0:
+            futs = [world.receive_async(1, tag) for tag in range(N)]
+            in_flight = threading.active_count()
+            world.send(1, -1, "go")            # all futures registered
+            vals = [f.result(timeout=30) for f in futs]
+            return vals, in_flight
+        world.receive(0, -1)                   # wait until all are pending
+        for tag in range(N):
+            world.send(0, tag, tag * tag)
+        return None, 0
+
+    out = parallelize_func(closure, timeout=60).execute(2)
+    vals, in_flight = out[0]
+    assert vals == [t * t for t in range(N)]
+    # world threads + expiry thread, NOT +100 waiter threads
+    assert in_flight - before < 10, (before, in_flight)
