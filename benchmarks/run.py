@@ -180,6 +180,55 @@ def bench_wire_codec(quick: bool):
                 "one copy per array payload")
 
 
+def bench_spawn_launcher(quick: bool):
+    """Quantify the multi-host bootstrap: a world spawned through the
+    module-entry CLI (fresh interpreter + import + HMAC handshake per
+    rank) vs the fork path, cold bootstrap and warm steady state. The
+    point of the warm rows: once booted, a spawned world dispatches jobs
+    exactly as fast as a forked one -- bootstrap cost is a one-time tax
+    the persistent pool amortizes away."""
+    from repro.core.cluster import ClusterPool, CommandLauncher, ForkLauncher
+    n = 2 if quick else 4
+
+    def ring(world):
+        rank, size = world.get_rank(), world.get_size()
+        if rank == 0:
+            world.send(1, 0, 42)
+            return world.receive(size - 1, 0)
+        t = world.receive(rank - 1, 0)
+        world.send((rank + 1) % size, 0, t)
+        return t
+
+    def boot_and_run(launcher):
+        with ClusterPool(n, launcher=launcher, timeout=120) as pool:
+            assert pool.run(ring)[0] == 42
+
+    bench(f"listing2_ring_boot_fork_n{n}",
+          lambda: boot_and_run(ForkLauncher()), repeat=2,
+          derived="fork + HMAC handshakes + broker + 1 job")
+    bench(f"listing2_ring_boot_spawn_n{n}",
+          lambda: boot_and_run(CommandLauncher()), repeat=2,
+          derived="module-entry subprocess: interpreter + import + "
+                  "HMAC handshakes + broker + 1 job")
+    fork_boot = row_value(f"listing2_ring_boot_fork_n{n}")
+    spawn_boot = row_value(f"listing2_ring_boot_spawn_n{n}")
+
+    pool = ClusterPool(n, launcher=CommandLauncher(), timeout=120)
+    try:
+        bench(f"listing2_ring_spawn_warm_n{n}",
+              lambda: pool.run(ring), repeat=5,
+              derived="persistent spawned pool steady state (direct "
+                      "plane, authenticated channels)")
+    finally:
+        pool.shutdown()
+    warm = row_value(f"listing2_ring_spawn_warm_n{n}")
+    if fork_boot and spawn_boot and warm:
+        ROWS.append((f"listing2_ring_spawn_bootstrap_tax_n{n}", 0.0,
+                     f"spawn boot {spawn_boot / fork_boot:.1f}x fork boot; "
+                     f"amortized over warm jobs ({spawn_boot / warm:.0f} "
+                     "jobs repay it)"))
+
+
 def bench_figure1_api_parity():
     """Figure 1: every MPIgnite method exists with the documented
     signature on both communicator implementations."""
@@ -354,6 +403,28 @@ def bench_roofline_bridge():
                      f"{frac_sum/n:.3f} over {n} baseline cells"))
 
 
+#: row-name prefixes every run must produce -- the paper's empirical
+#: artifacts. `--check` turns their absence into a nonzero exit so a CI
+#: smoke step cannot silently pass while producing nothing.
+REQUIRED_ROW_PREFIXES = (
+    "listing1_matvec_local", "listing1_matvec_cluster",
+    "listing2_ring_local", "listing2_ring_cluster",
+    "listing2_ring_boot_spawn", "listing2_ring_spawn_warm",
+    "listing4_2d_matvec_local", "listing4_2d_matvec_cluster",
+    "figure1_api_parity", "wire_codec_roundtrip",
+)
+
+
+def check_rows(rows) -> list[str]:
+    """Names of missing/failed expectations ([] means healthy)."""
+    names = [n for n, _, _ in rows]
+    problems = [f"missing required row {p}*" for p in REQUIRED_ROW_PREFIXES
+                if not any(nm.startswith(p) for nm in names)]
+    problems += [f"row {nm} FAILED: {d}" for nm, us, d in rows
+                 if us < 0 or d.startswith("FAILED")]
+    return problems
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -362,11 +433,15 @@ def main() -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as JSON (e.g. BENCH_<date>.json) "
                          "so the perf trajectory is tracked across PRs")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every required listing row "
+                         "was produced and none failed (CI smoke gate)")
     args = ap.parse_args()
 
     bench_listing1_matvec()
     bench_listing2_ring()
     bench_listing4_2d_matvec()
+    bench_spawn_launcher(args.quick)
     bench_figure1_api_parity()
     bench_wire_codec(args.quick)
     bench_backend_byte_model()
@@ -394,6 +469,16 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"# wrote {args.json} ({len(ROWS)} rows)", file=sys.stderr)
+
+    if args.check:
+        problems = check_rows(ROWS)
+        # roofline artifacts are optional inputs, not produced by this run
+        problems = [p for p in problems if "roofline_artifacts" not in p]
+        if problems:
+            for p in problems:
+                print(f"# BENCH CHECK FAILED: {p}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# bench check OK ({len(ROWS)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -17,8 +17,8 @@ from .comm import PeerComm, cost_log, cost_scope
 from .closures import (MPIgniteContext, ParallelClosure, RANK_AXIS, flat_mesh,
                        parallelize_func)
 from .cluster import (ClusterComm, ClusterFuncRDD, ClusterPool,
-                      ExecutorFailure, ExecutorPool, get_pool,
-                      shutdown_pools)
+                      CommandLauncher, ExecutorFailure, ExecutorPool,
+                      ForkLauncher, get_pool, shutdown_pools)
 from .local import LocalComm, ParallelFuncRDD
 from .matching import Mailbox, MessageComm
 
@@ -27,6 +27,6 @@ __all__ = [
     "MPIgniteContext", "ParallelClosure",
     "RANK_AXIS", "flat_mesh", "parallelize_func", "LocalComm",
     "ParallelFuncRDD", "ClusterComm", "ClusterFuncRDD", "ClusterPool",
-    "ExecutorFailure", "ExecutorPool", "get_pool", "shutdown_pools",
-    "Mailbox", "MessageComm",
+    "CommandLauncher", "ExecutorFailure", "ExecutorPool", "ForkLauncher",
+    "get_pool", "shutdown_pools", "Mailbox", "MessageComm",
 ]

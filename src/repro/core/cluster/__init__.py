@@ -1,27 +1,37 @@
 """Cluster transport: the paper's cluster deployment with real processes.
 
 - ``wire``       : length-prefixed frames + numpy/pytree payload codec
-                   (decode through one memoryview -- arrays copy once)
+                   (decode through one memoryview -- arrays copy once),
+                   HMAC challenge-response auth for both planes
 - ``serializer`` : closures -> bytes for pooled job dispatch
+- ``launcher``   : how ranks start -- ``ForkLauncher`` (single-host
+                   fork) or ``CommandLauncher`` (module-entry CLI via an
+                   ssh/srun/kubectl-shaped command template)
 - ``executor``   : persistent executor process (job loop, mailbox,
                    heartbeats, direct data-plane channels,
-                   ``ClusterComm``)
-- ``driver``     : ``ExecutorPool``/``ClusterPool`` -- fork once, broker
-                   peer addresses, dispatch jobs, detect failure;
+                   ``ClusterComm``); also the ``python -m
+                   repro.core.cluster.executor`` remote bootstrap CLI
+- ``driver``     : ``ExecutorPool``/``ClusterPool`` -- launch once,
+                   broker peer addresses, dispatch jobs, detect failure;
                    ``ClusterFuncRDD`` cold-start wrapper; ``get_pool``
                    warm-pool cache
 - ``supervisor`` : failure-triggered checkpoint-restart recovery
                    (``ClusterSupervisor``), degrading to the phase-1
-                   ``linear`` backend per ``train.ft.RecoveryPolicy``
+                   ``linear`` backend per ``train.ft.RecoveryPolicy``,
+                   relaunching through the configured launcher
 """
 from . import wire
 from .driver import (ClusterFuncRDD, ClusterPool, ExecutorFailure,
                      ExecutorPool, get_pool, shutdown_pools)
 from .executor import ClusterComm
+from .launcher import (CommandLauncher, ExecutorSpec, ForkLauncher,
+                       Launcher)
+from .wire import AuthError, load_secret
 
 __all__ = ["wire", "ClusterFuncRDD", "ClusterPool", "ExecutorFailure",
            "ExecutorPool", "ClusterComm", "ClusterSupervisor", "RunContext",
-           "get_pool", "shutdown_pools"]
+           "get_pool", "shutdown_pools", "Launcher", "ForkLauncher",
+           "CommandLauncher", "ExecutorSpec", "AuthError", "load_secret"]
 
 
 def __getattr__(name):

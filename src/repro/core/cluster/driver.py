@@ -28,21 +28,31 @@ turns that into checkpoint-restart recovery with a fresh pool.
 pool per ``execute``); ``get_pool`` is the module-level warm-pool cache
 keyed by ``(n, backend, data_plane)`` that ``ParallelClosure.execute(
 mode="cluster")`` routes through.
+
+Multi-host: executors are started through a pluggable ``Launcher``
+(``ForkLauncher`` keeps the single-host fork path; ``CommandLauncher``
+spawns the module-entry CLI via an arbitrary command template --
+ssh/srun/kubectl shaped). The control listener binds ``bind_host`` and
+tells executors to dial ``advertise_host``; every accepted connection
+must pass the ``wire`` HMAC handshake and present a MAC-bound hello
+before it is registered, and a rejection thread keeps refusing
+unauthenticated dials for the pool's whole lifetime.
 """
 from __future__ import annotations
 
 import atexit
 import collections
-import multiprocessing
 import os
 import queue
 import socket
+import stat
+import tempfile
 import threading
 import time
 from typing import Any, Callable
 
 from . import wire
-from .executor import executor_main
+from .launcher import ExecutorSpec, ForkLauncher, Launcher
 from .serializer import dumps_closure
 
 
@@ -71,18 +81,16 @@ class ExecutorPool:
 
     def __init__(self, n: int, backend: str = "linear",
                  timeout: float = 60.0, data_plane: str = "direct",
-                 hb_interval: float = 0.1, hb_timeout: float = 2.0):
+                 hb_interval: float = 0.1, hb_timeout: float = 2.0,
+                 launcher: Launcher | None = None,
+                 bind_host: str = "127.0.0.1",
+                 advertise_host: str | None = None,
+                 secret: bytes | str | None = None):
         if n < 1:
             raise ValueError("cluster mode needs at least one executor")
         if data_plane not in ("direct", "relay"):
             raise ValueError(f"unknown data_plane {data_plane!r}; "
                              "expected 'direct' or 'relay'")
-        try:
-            mp = multiprocessing.get_context("fork")
-        except ValueError as e:  # pragma: no cover - non-POSIX platforms
-            raise RuntimeError(
-                "cluster mode requires the fork start method (POSIX); use "
-                "mode='local' here") from e
 
         self.n = n
         self.backend = backend
@@ -95,22 +103,65 @@ class ExecutorPool:
         self._owner_pid = os.getpid()
         self.broken_reason = ""
         self.dead_ranks: list[int] = []
+        self.launcher = launcher if launcher is not None else ForkLauncher()
+        self.bind_host = bind_host
+        self.advertise_host = advertise_host
+        self.secret = wire.load_secret(secret) or wire.generate_secret()
+        self._secret_path: str | None = None
         #: frames seen at the driver, by kind -- the proof obligation for
         #: the direct data plane is frame_counts["msg"] == 0.
         self.frame_counts: collections.Counter = collections.Counter()
+        #: dials refused by the auth layer (bootstrap + rejection thread)
+        self.rejected_dials = 0
 
         self._server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._server.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._server.bind(("127.0.0.1", 0))
+        self._server.bind((bind_host, 0))
         self._server.listen(n)
         port = self._server.getsockname()[1]
+        # the address executors dial: an explicit advertise host wins; a
+        # wildcard bind with no advertise host degrades to loopback (the
+        # single-host case -- multi-host launches must say who they are).
+        # NOTE: this is strictly the *driver's* address. Each executor's
+        # own data-plane advertise address is a different thing -- set
+        # per rank via the CLI's --advertise-host (launcher template),
+        # or derived from that rank's route to the driver -- so the spec
+        # below deliberately does NOT forward pool advertise_host.
+        dial_host = advertise_host or (
+            "127.0.0.1" if bind_host in ("0.0.0.0", "::", "") else bind_host)
 
-        self._procs = [mp.Process(
-            target=executor_main,
-            args=(rank, n, port, backend, timeout, hb_interval, data_plane),
-            daemon=True) for rank in range(n)]
-        for p in self._procs:
-            p.start()
+        if self.launcher.needs_secret_file:
+            fd, self._secret_path = tempfile.mkstemp(prefix="mpignite-",
+                                                     suffix=".secret")
+            os.write(fd, self.secret)
+            os.close(fd)
+            os.chmod(self._secret_path, stat.S_IRUSR | stat.S_IWUSR)
+
+        specs = [ExecutorSpec(
+            rank=rank, world=n, driver_host=dial_host, driver_port=port,
+            backend=backend, timeout=timeout, hb_interval=hb_interval,
+            data_plane=data_plane, bind_host=bind_host,
+            secret=self.secret,
+            secret_file=self._secret_path) for rank in range(n)]
+        self._handles = []
+        try:
+            for spec in specs:
+                self._handles.append(self.launcher.launch(spec))
+        except Exception:
+            # a half-launched world must not outlive a failed constructor
+            # (command-spawned executors are not daemons)
+            for h in self._handles:
+                try:
+                    h.terminate()
+                except Exception:       # noqa: BLE001 - best effort
+                    pass
+            self._server.close()
+            if self._secret_path is not None:
+                try:
+                    os.unlink(self._secret_path)
+                except OSError:
+                    pass
+            raise
 
         self._conns: list[socket.socket | None] = [None] * n
         self._out_qs: list[queue.Queue] = [queue.Queue(maxsize=128)
@@ -118,7 +169,7 @@ class ExecutorPool:
         self._last_seen = [time.time()] * n
         self._conn_dead = [False] * n
         self._peer_rx_seen: dict[tuple[int, int], int] = {}
-        self._data_ports: list[int | None] = [None] * n
+        self._data_addrs: list[tuple[str, int] | None] = [None] * n
 
         # single-writer state for the job in flight
         self._lock = threading.Lock()
@@ -132,45 +183,162 @@ class ExecutorPool:
         self._done_event = threading.Event()
         self._error_event = threading.Event()
 
+        # Everything past the launch must tear the world down on
+        # failure: command-spawned executors are not daemons, so an
+        # exception escaping __init__ without shutdown() would orphan
+        # them (plus the server socket and the 0600 secret file).
         try:
-            self._server.settimeout(timeout)
-            pending = n
-            while pending:
-                conn, _ = self._server.accept()
-                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                frame = wire.recv_frame(conn)
-                if frame is None or frame[0].get("kind") != "hello":
-                    conn.close()
-                    continue
-                rank = frame[0]["rank"]
-                self.frame_counts["hello"] += 1
-                self._conns[rank] = conn
-                self._data_ports[rank] = frame[0].get("data_port")
-                self._last_seen[rank] = time.time()
-                pending -= 1
-        except socket.timeout:
-            missing = [r for r in range(n) if self._conns[r] is None]
+            # Each accepted dial is authenticated on its own thread: one
+            # stalled or rogue connection (a port scanner on a routable
+            # bind) must not serially consume the bootstrap deadline
+            # while legitimate executors queue in the listen backlog.
+            self._admit_lock = threading.Lock()
+            deadline = time.time() + timeout
+            try:
+                while any(c is None for c in self._conns):
+                    # a rank that died before registering (wrong secret
+                    # -> exit 3, bad launch command, missing package on
+                    # the remote side) fails the bootstrap immediately
+                    # with its exit status, not after the full timeout
+                    dead = [r for r in range(n)
+                            if self._conns[r] is None
+                            and not self._handles[r].is_alive()]
+                    if dead:
+                        codes = {r: self._handles[r].exit_code()
+                                 for r in dead}
+                        raise ExecutorFailure(
+                            dead, "executor exited before registering "
+                            f"(exit codes {codes}; 3 = auth refused)")
+                    remaining = deadline - time.time()
+                    if remaining <= 0:
+                        missing = [r for r in range(n)
+                                   if self._conns[r] is None]
+                        raise ExecutorFailure(
+                            missing, "never connected to the driver")
+                    self._server.settimeout(min(remaining, 0.25))
+                    try:
+                        conn, _ = self._server.accept()
+                    except socket.timeout:
+                        continue
+                    conn.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                    threading.Thread(target=self._admit_one, args=(conn,),
+                                     daemon=True).start()
+            finally:
+                try:
+                    self._server.settimeout(None)
+                except OSError:
+                    pass
+
+            self._writers = [threading.Thread(target=self._writer,
+                                              args=(r,), daemon=True)
+                             for r in range(n)]
+            self._routers = [threading.Thread(target=self._route,
+                                              args=(r,), daemon=True)
+                             for r in range(n)]
+            for t in self._writers:
+                t.start()
+
+            # broker the data-plane address exchange before any job
+            # runs, using the addresses each executor *advertised*
+            if data_plane == "direct":
+                addrs = {str(r): list(self._data_addrs[r])
+                         for r in range(n)}
+                for r in range(n):
+                    self._out_qs[r].put(({"kind": "peers",
+                                          "addrs": addrs}, b""))
+
+            for t in self._routers:
+                t.start()
+
+            # keep refusing unauthenticated/rogue dials for the pool's
+            # whole life
+            self._rejector = threading.Thread(target=self._reject_loop,
+                                              daemon=True)
+            self._rejector.start()
+        except Exception:
             self.shutdown()
-            raise ExecutorFailure(missing, "never connected to the driver")
-        finally:
-            self._server.settimeout(None)
+            raise
 
-        self._writers = [threading.Thread(target=self._writer, args=(r,),
-                                          daemon=True) for r in range(n)]
-        self._routers = [threading.Thread(target=self._route, args=(r,),
-                                          daemon=True) for r in range(n)]
-        for t in self._writers:
-            t.start()
+    def _admit_one(self, conn: socket.socket) -> None:
+        """Authenticate one dialing executor (own thread): HMAC
+        handshake, then a hello MAC-bound to that handshake's transcript
+        (so a captured hello cannot re-register on a new connection).
+        Any failure -- wrong secret, legacy frame instead of a
+        handshake, bad/replayed hello, rank out of range, a rank that
+        already registered -- closes the connection and counts a
+        rejected dial."""
+        try:
+            transcript = wire.server_handshake(
+                conn, self.secret, timeout=min(self.timeout,
+                                               wire.AUTH_TIMEOUT))
+            conn.settimeout(min(self.timeout, wire.AUTH_TIMEOUT))
+            frame = wire.recv_frame(conn, limit=wire.PREAUTH_MAX_FRAME)
+            conn.settimeout(None)
+            if frame is None or frame[0].get("kind") != "hello":
+                raise wire.AuthError("no hello after handshake")
+            header = frame[0]
+            if not wire.verify_hello(self.secret, transcript, header):
+                raise wire.AuthError("hello MAC invalid (replay?)")
+            rank = header["rank"]
+            if not (isinstance(rank, int) and 0 <= rank < self.n):
+                raise wire.AuthError(f"hello rank {rank!r} out of range")
+            addr = header.get("data_addr")
+            if self.data_plane == "direct" and not addr:
+                # a direct-plane world cannot broker peers without it --
+                # fail the dial now, not the broker later
+                raise wire.AuthError(f"rank {rank} advertised no data_addr "
+                                     "for the direct data plane")
+            with self._admit_lock:      # rank claim must be atomic
+                if self._conns[rank] is not None:
+                    raise wire.AuthError(f"rank {rank} already registered")
+                self._data_addrs[rank] = (addr[0], addr[1]) if addr else None
+                self._last_seen[rank] = time.time()
+                self.frame_counts["hello"] += 1
+                # publish the connection last: the bootstrap loop treats
+                # a non-None conn as a fully-registered rank
+                self._conns[rank] = conn
+        except (wire.AuthError, ConnectionError, OSError, ValueError,
+                KeyError, TypeError, AttributeError, IndexError):
+            with self._admit_lock:      # concurrent rejections must not
+                self.rejected_dials += 1    # lose increments
+            try:
+                conn.close()
+            except OSError:
+                pass
 
-        # broker the data-plane address exchange before any job runs
-        if data_plane == "direct":
-            addrs = {str(r): ["127.0.0.1", self._data_ports[r]]
-                     for r in range(n)}
-            for r in range(n):
-                self._out_qs[r].put(({"kind": "peers", "addrs": addrs}, b""))
+    def _reject_loop(self):
+        """Post-bootstrap acceptor: the world is complete, so *every*
+        later dial is rogue. Run the handshake (so a wrong-secret dialer
+        learns nothing but a refusal) and close."""
+        while True:
+            try:
+                conn, _ = self._server.accept()
+            except OSError:
+                return                  # server closed: pool shut down
+            with self._admit_lock:
+                self.rejected_dials += 1
+            try:
+                wire.server_handshake(conn, self.secret, timeout=5.0)
+            except Exception:   # noqa: BLE001 -- the lifetime guarantee:
+                pass            # no dial, however malformed, may kill
+            finally:            # this thread
+                try:
+                    conn.close()
+                except OSError:
+                    pass
 
-        for t in self._routers:
-            t.start()
+    @property
+    def data_addrs(self) -> list[tuple[str, int] | None]:
+        """Each rank's advertised data-plane address (None in relay
+        mode) -- what the driver brokered to peers."""
+        return list(self._data_addrs)
+
+    @property
+    def control_addr(self) -> tuple[str, int]:
+        """The (host, port) the control-plane listener is bound to."""
+        host, port = self._server.getsockname()[:2]
+        return host, port
 
     # -- context manager ----------------------------------------------------
     def __enter__(self) -> "ExecutorPool":
@@ -181,7 +349,7 @@ class ExecutorPool:
 
     @property
     def pids(self) -> list[int]:
-        return [p.pid for p in self._procs]
+        return [h.pid for h in self._handles]
 
     # -- driver threads -----------------------------------------------------
     def _writer(self, rank: int):
@@ -256,7 +424,7 @@ class ExecutorPool:
     # -- job dispatch -------------------------------------------------------
     def _health_check(self) -> None:
         dead = [r for r in range(self.n)
-                if self._conn_dead[r] or not self._procs[r].is_alive()]
+                if self._conn_dead[r] or not self._handles[r].is_alive()]
         if dead:
             self._mark_broken(dead, "executor process died between jobs")
 
@@ -322,13 +490,13 @@ class ExecutorPool:
                 dead = [r for r in range(self.n)
                         if not self._done[r]
                         and (self._conn_dead[r]
-                             or not self._procs[r].is_alive()
+                             or not self._handles[r].is_alive()
                              or now - self._last_seen[r] > self.hb_timeout)]
                 if dead:
                     self._raise_executor_errors()       # root cause first
                     reason = ("connection closed (heartbeats ended)"
                               if any(self._conn_dead[r] for r in dead)
-                              else f"missed heartbeats for "
+                              else "missed heartbeats for "
                                    f">{self.hb_timeout:.1f}s")
                     self._mark_broken(dead, reason)
                 if now > deadline:
@@ -365,12 +533,12 @@ class ExecutorPool:
                 q.put_nowait(({"kind": "ctrl", "op": "exit"}, b""))
             except queue.Full:
                 pass
-        for p in self._procs:
-            p.join(timeout=2.0)
-        for p in self._procs:
-            if p.is_alive():
-                p.terminate()
-                p.join(timeout=2.0)
+        for h in self._handles:
+            h.join(timeout=2.0)
+        for h in self._handles:
+            if h.is_alive():
+                h.terminate()
+                h.join(timeout=2.0)
         for conn in self._conns:
             if conn is not None:
                 try:
@@ -383,6 +551,12 @@ class ExecutorPool:
             self._server.close()
         except OSError:
             pass
+        if self._secret_path is not None:
+            try:
+                os.unlink(self._secret_path)
+            except OSError:
+                pass
+            self._secret_path = None
 
 
 #: context-manager spelling from the issue; same object.
@@ -400,14 +574,25 @@ _POOLS_LOCK = threading.Lock()
 
 def get_pool(n: int, backend: str = "linear", data_plane: str = "direct",
              timeout: float = 60.0, hb_interval: float = 0.1,
-             hb_timeout: float = 2.0) -> ExecutorPool:
-    """The warm pool for ``(n, data_plane)`` -- created on first use,
-    replaced transparently if a failure broke the cached one. The
-    backend is deliberately *not* part of the key: it is a per-job
+             hb_timeout: float = 2.0, launcher: Launcher | None = None,
+             bind_host: str = "127.0.0.1", advertise_host: str | None = None,
+             secret: bytes | str | None = None) -> ExecutorPool:
+    """The warm pool for this transport configuration -- created on
+    first use, replaced transparently if a failure broke the cached one.
+    The backend is deliberately *not* part of the key: it is a per-job
     parameter (``pool.run(fn, backend=...)``), so closures running
     linear and ring collectives share one executor world; ``backend``
-    here only seeds a new pool's default."""
-    key = (n, data_plane)
+    here only seeds a new pool's default. Everything that shapes the
+    *world itself* -- launcher, binds, secret -- IS part of the key, so
+    asking for a differently-launched or differently-credentialed pool
+    never silently hands back an incompatible cached one."""
+    # launcher=None and an explicit ForkLauncher() start identical
+    # worlds -- normalize so they share one cached pool
+    launcher_key = (launcher if launcher is not None
+                    else ForkLauncher()).cache_key()
+    secret_key = wire.load_secret(secret)
+    key = (n, data_plane, launcher_key, bind_host, advertise_host,
+           secret_key)
     with _POOLS_LOCK:
         pool = _POOLS.get(key)
         if pool is not None and not (pool.broken or pool.closed):
@@ -416,7 +601,9 @@ def get_pool(n: int, backend: str = "linear", data_plane: str = "direct",
             pool.shutdown()
         pool = ExecutorPool(n, backend=backend, timeout=timeout,
                             data_plane=data_plane, hb_interval=hb_interval,
-                            hb_timeout=hb_timeout)
+                            hb_timeout=hb_timeout, launcher=launcher,
+                            bind_host=bind_host,
+                            advertise_host=advertise_host, secret=secret)
         _POOLS[key] = pool
         return pool
 
@@ -450,19 +637,31 @@ class ClusterFuncRDD:
 
     def __init__(self, fn: Callable, timeout: float = 60.0,
                  backend: str = "linear", hb_interval: float = 0.1,
-                 hb_timeout: float = 2.0, data_plane: str = "direct"):
+                 hb_timeout: float = 2.0, data_plane: str = "direct",
+                 launcher: Launcher | None = None,
+                 bind_host: str = "127.0.0.1",
+                 advertise_host: str | None = None,
+                 secret: bytes | str | None = None):
         self._fn = fn
         self._timeout = timeout
         self._backend = backend
         self._hb_interval = hb_interval
         self._hb_timeout = hb_timeout
         self._data_plane = data_plane
+        self._launcher = launcher
+        self._bind_host = bind_host
+        self._advertise_host = advertise_host
+        self._secret = secret
 
     def execute(self, n: int) -> list:
         pool = ExecutorPool(n, backend=self._backend, timeout=self._timeout,
                             data_plane=self._data_plane,
                             hb_interval=self._hb_interval,
-                            hb_timeout=self._hb_timeout)
+                            hb_timeout=self._hb_timeout,
+                            launcher=self._launcher,
+                            bind_host=self._bind_host,
+                            advertise_host=self._advertise_host,
+                            secret=self._secret)
         try:
             return pool.run(self._fn)
         finally:

@@ -28,9 +28,22 @@ behind a bulk transfer.
 ``ClusterComm`` subclasses the transport-agnostic ``MessageComm``; a
 fresh communicator is built per job with ``ctx=job id``, which isolates
 any stale matched messages a misbehaved previous job left behind.
+
+Multi-host: this module is also a CLI (``python -m
+repro.core.cluster.executor --rank R --world N --driver HOST:PORT
+--secret-file F``) so a launcher can start ranks on remote machines
+instead of forking them. The data listener binds ``--bind-host`` (e.g.
+``0.0.0.0``) and advertises ``--advertise-host`` to peers; when binding
+a wildcard without an explicit advertise address, the executor
+advertises the local address of its route to the driver. Every
+connection -- the control dial to the driver, and both ends of every
+peer channel -- runs the ``wire`` HMAC handshake, and hello frames are
+MAC-bound to the handshake transcript so registrations cannot be
+replayed.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import queue
 import socket
@@ -52,10 +65,11 @@ class ExecutorChannel:
     def __init__(self, sock: socket.socket, rank: int, hb_interval: float,
                  data_plane: str = "direct",
                  data_server: socket.socket | None = None,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", secret: bytes = b""):
         self.sock = sock
         self.rank = rank
         self.host = host
+        self.secret = secret
         self.data_plane = data_plane
         self.wlock = threading.Lock()
         # one mailbox per job id: structural isolation between jobs, and
@@ -71,6 +85,11 @@ class ExecutorChannel:
         self.peer_addrs: dict[int, tuple[str, int]] = {}
         self._peer_socks: dict[int, tuple[socket.socket, threading.Lock]] = {}
         self._peer_lock = threading.Lock()
+        #: dst -> monotonic time before which we won't re-dial it. A
+        #: peer whose advertised address drops packets would otherwise
+        #: cost a full connect timeout on *every* send; backing off
+        #: keeps the relay fallback fast enough to carry the traffic.
+        self._peer_backoff: dict[int, float] = {}
         self._rx_counts: dict[int, int] = {}    # data-plane bytes per src
         self._rx_lock = threading.Lock()
         self._hb_stop = threading.Event()
@@ -160,8 +179,11 @@ class ExecutorChannel:
                              daemon=True).start()
 
     def _peer_read_loop(self, conn: socket.socket):
-        """Drain one inbound peer connection into the mailbox, counting
-        received bytes per source so heartbeats can vouch for the peer."""
+        """Authenticate then drain one inbound peer connection into the
+        mailbox, counting received bytes per source so heartbeats can
+        vouch for the peer. A dialer failing the handshake (wrong secret,
+        or a legacy client leading with a bare hello) is disconnected
+        before any frame reaches a mailbox: fail closed."""
         src = None
 
         def on_bytes(k):
@@ -169,8 +191,11 @@ class ExecutorChannel:
                 with self._rx_lock:
                     self._rx_counts[src] = self._rx_counts.get(src, 0) + k
         try:
-            first = wire.recv_frame(conn)
-            if first is None or first[0].get("kind") != "hello":
+            transcript = wire.server_handshake(conn, self.secret)
+            first = wire.recv_frame(conn, limit=wire.PREAUTH_MAX_FRAME)
+            if (first is None or first[0].get("kind") != "hello"
+                    or not wire.verify_hello(self.secret, transcript,
+                                             first[0])):
                 conn.close()
                 return
             src = first[0]["src"]
@@ -183,8 +208,10 @@ class ExecutorChannel:
                     self.mailbox_for(header.get("job", 0)).put(
                         header["ctx"], header["tag"], header["src"],
                         wire.decode(payload))
-        except (ConnectionError, OSError, ValueError):
-            return
+        except (ConnectionError, OSError, ValueError, TypeError,
+                AttributeError, KeyError):
+            return      # malformed peer frames end the connection, not
+            # the listener -- _accept_loop keeps serving other peers
         finally:
             try:
                 conn.close()
@@ -205,13 +232,27 @@ class ExecutorChannel:
             addr = self.peer_addrs.get(dst)
             if addr is None:
                 return None
+            if time.monotonic() < self._peer_backoff.get(dst, 0.0):
+                return None     # recent dial failure: relay, don't block
             try:
-                s = socket.create_connection(addr, timeout=30.0)
+                s = socket.create_connection(addr, timeout=10.0)
             except OSError:
+                self._peer_backoff[dst] = time.monotonic() + 30.0
+                return None
+            try:
+                transcript = wire.client_handshake(s, self.secret)
+            except wire.AuthError:
+                self._peer_backoff[dst] = time.monotonic() + 30.0
+                try:
+                    s.close()
+                except OSError:
+                    pass
                 return None
             s.settimeout(None)      # blocking sends: TCP backpressure,
             s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)  # not
-            wire.send_frame(s, {"kind": "hello", "src": self.rank})  # EAGAIN
+            hello = {"kind": "hello", "src": self.rank}               # EAGAIN
+            hello["mac"] = wire.hello_mac(self.secret, transcript, hello)
+            wire.send_frame(s, hello)
             got = (s, threading.Lock())
             self._peer_socks[dst] = got
             return got
@@ -307,39 +348,64 @@ class ClusterComm(MessageComm):
         os._exit(exit_code)
 
 
-def executor_main(rank: int, size: int, port: int, backend: str,
-                  timeout: float, hb_interval: float,
-                  data_plane: str = "direct",
-                  host: str = "127.0.0.1") -> None:
+def executor_main(rank: int, size: int, driver: tuple[str, int],
+                  backend: str, timeout: float, hb_interval: float,
+                  data_plane: str = "direct", bind_host: str = "127.0.0.1",
+                  advertise_host: str | None = None,
+                  secret: bytes | None = None) -> None:
     """Entry point of a persistent executor process.
 
-    Bootstrap: open the data listener (direct mode), dial the driver,
-    advertise ``(rank, pid, data_port)`` in the hello frame, wait for the
-    driver's brokered ``peers`` address map. Then loop: each ``job``
-    frame carries a serialized closure which runs against a fresh
+    Bootstrap: open the data listener on ``bind_host`` (direct mode),
+    dial the driver at ``driver = (host, port)``, run the HMAC handshake,
+    advertise ``(rank, pid, data_addr)`` in the MAC-bound hello frame,
+    wait for the driver's brokered ``peers`` address map. Then loop: each
+    ``job`` frame carries a serialized closure which runs against a fresh
     ``ClusterComm`` (ctx = job id); the return value or traceback goes
     back as a ``result`` frame. A job that raises does *not* kill the
     executor -- the pool survives user exceptions.
     """
+    if secret is None:
+        secret = wire.load_secret()
+    if not secret:
+        raise SystemExit("executor: no shared secret (pass secret=, "
+                         "--secret-file, or set $" + wire.SECRET_ENV)
+
     data_server = None
     data_port = None
     if data_plane == "direct":
         data_server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         data_server.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        data_server.bind((host, 0))
+        data_server.bind((bind_host, 0))
         data_server.listen(size)
         data_port = data_server.getsockname()[1]
 
-    sock = socket.create_connection((host, port), timeout=timeout)
+    sock = socket.create_connection(driver, timeout=timeout)
     sock.settimeout(None)   # the connect timeout must NOT become a read
     # timeout: a warm pool's control plane is legitimately quiet between
     # jobs (heartbeats flow executor->driver only), and a timeout here
     # would make idle executors exit and the pool self-destruct.
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    wire.send_frame(sock, {"kind": "hello", "rank": rank, "pid": os.getpid(),
-                           "data_port": data_port})
+    try:
+        transcript = wire.client_handshake(sock, secret)
+    except wire.AuthError:
+        os._exit(3)         # driver refused us (or we refused the driver)
+    # the address peers should dial: an explicit advertise host wins;
+    # a wildcard bind falls back to the local address of this
+    # executor's route to the driver (correct interface by construction).
+    if advertise_host:
+        data_host = advertise_host
+    elif bind_host in ("0.0.0.0", "::", ""):
+        data_host = sock.getsockname()[0]
+    else:
+        data_host = bind_host
+    hello = {"kind": "hello", "rank": rank, "pid": os.getpid(),
+             "data_addr": ([data_host, data_port]
+                           if data_port is not None else None)}
+    hello["mac"] = wire.hello_mac(secret, transcript, hello)
+    wire.send_frame(sock, hello)
     chan = ExecutorChannel(sock, rank, hb_interval, data_plane=data_plane,
-                           data_server=data_server, host=host)
+                           data_server=data_server, host=data_host,
+                           secret=secret)
     if data_plane == "direct" and not chan.peers_ready.wait(timeout):
         os._exit(1)
 
@@ -373,3 +439,53 @@ def executor_main(rank: int, size: int, port: int, backend: str,
                 break
     chan.close_peers()
     os._exit(0)
+
+
+def main(argv: list[str] | None = None) -> None:
+    """Module entry (``python -m repro.core.cluster.executor``): boot one
+    rank on whatever machine this interpreter runs on and join the world
+    at ``--driver``. This is the remote half of the spawn-and-connect
+    bridge -- launchers wrap this exact command in ssh/srun/kubectl."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.cluster.executor",
+        description="Boot one MPIgnite cluster executor and dial the "
+                    "driver's control plane.")
+    ap.add_argument("--rank", type=int, required=True,
+                    help="this executor's world rank")
+    ap.add_argument("--world", type=int, required=True,
+                    help="total number of ranks")
+    ap.add_argument("--driver", required=True, metavar="HOST:PORT",
+                    help="driver control-plane address")
+    ap.add_argument("--secret-file", default=None,
+                    help="file holding the shared cluster secret "
+                         f"(fallback: ${wire.SECRET_ENV})")
+    ap.add_argument("--backend", default="linear",
+                    help="default collective backend (linear|ring|native)")
+    ap.add_argument("--timeout", type=float, default=60.0)
+    ap.add_argument("--hb-interval", type=float, default=0.1)
+    ap.add_argument("--data-plane", default="direct",
+                    choices=("direct", "relay"))
+    ap.add_argument("--bind-host", default="0.0.0.0",
+                    help="interface for the data-plane listener "
+                         "(default: all interfaces)")
+    ap.add_argument("--advertise-host", default=None,
+                    help="address peers should dial; defaults to the "
+                         "local address of the route to the driver when "
+                         "binding a wildcard")
+    args = ap.parse_args(argv)
+
+    host, _, port = args.driver.rpartition(":")
+    if not host or not port.isdigit():
+        ap.error(f"--driver must be HOST:PORT, got {args.driver!r}")
+    secret = wire.load_secret(secret_file=args.secret_file)
+    if not secret:
+        ap.error("no shared secret: pass --secret-file or set "
+                 f"${wire.SECRET_ENV}")
+    executor_main(args.rank, args.world, (host, int(port)), args.backend,
+                  args.timeout, args.hb_interval, args.data_plane,
+                  bind_host=args.bind_host,
+                  advertise_host=args.advertise_host, secret=secret)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Pluggable executor launchers: how ranks come into existence.
+
+PR-2's pool hardcoded ``fork`` -- fine on one machine, a dead end for the
+paper's actual premise (peer communication inside a *cluster*). This
+module splits "what an executor needs to know" (``ExecutorSpec``) from
+"how its process starts" (``Launcher.launch -> ExecutorHandle``):
+
+- ``ForkLauncher``    : today's behavior -- ``multiprocessing`` fork of
+  ``executor_main`` in-process. Zero startup cost, single-host only, the
+  secret rides into the child as inherited memory.
+- ``CommandLauncher`` : spawn via an arbitrary command template, each
+  element ``str.format``-ed with the spec's fields. The default template
+  runs the module entry (``python -m repro.core.cluster.executor``) as a
+  plain subprocess; a template like ``["ssh", "node{rank}", "python",
+  "-m", "repro.core.cluster.executor", ...]`` reaches remote machines,
+  and the same shape covers ``srun`` / ``kubectl exec``. The shared
+  secret travels as a *file path* (``{secret_file}``), never argv, so it
+  does not leak into process listings.
+
+The pool and the supervisor both speak only this interface, so
+checkpoint-restart recovery relaunches through whatever launcher the
+world was built with -- a kill-an-ssh-rank failure restarts ssh ranks,
+not forks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+import subprocess
+import sys
+from typing import Sequence
+
+
+@dataclasses.dataclass
+class ExecutorSpec:
+    """Everything one rank needs to boot and join the world."""
+    rank: int
+    world: int
+    driver_host: str
+    driver_port: int
+    backend: str = "linear"
+    timeout: float = 60.0
+    hb_interval: float = 0.1
+    data_plane: str = "direct"
+    bind_host: str = "127.0.0.1"
+    #: this rank's *own* data-plane advertise address. The pool never
+    #: fills it (the driver's advertise_host is a different address --
+    #: the one executors dial); set it per rank through a launcher
+    #: template's --advertise-host, or leave None to derive it from the
+    #: rank's route to the driver.
+    advertise_host: str | None = None
+    secret: bytes = b""
+    secret_file: str | None = None
+
+    @property
+    def driver(self) -> str:
+        return f"{self.driver_host}:{self.driver_port}"
+
+    def format_args(self) -> dict:
+        """The substitution map for ``CommandLauncher`` templates."""
+        return {
+            "rank": self.rank, "world": self.world, "driver": self.driver,
+            "driver_host": self.driver_host, "driver_port": self.driver_port,
+            "backend": self.backend, "timeout": self.timeout,
+            "hb_interval": self.hb_interval, "data_plane": self.data_plane,
+            "bind_host": self.bind_host,
+            "advertise_host": self.advertise_host or "",
+            "secret_file": self.secret_file or "",
+            "python": sys.executable,
+        }
+
+
+class ExecutorHandle:
+    """Liveness/teardown facade over however the rank was started."""
+
+    pid: int | None
+
+    def is_alive(self) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def terminate(self) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def join(self, timeout: float | None = None) -> None:
+        raise NotImplementedError  # pragma: no cover - interface
+
+    def exit_code(self) -> int | None:
+        """The process's exit status, or None while it runs."""
+        raise NotImplementedError  # pragma: no cover - interface
+
+
+class _ForkHandle(ExecutorHandle):
+    def __init__(self, proc: multiprocessing.Process):
+        self._proc = proc
+
+    @property
+    def pid(self) -> int | None:
+        return self._proc.pid
+
+    def is_alive(self) -> bool:
+        return self._proc.is_alive()
+
+    def terminate(self) -> None:
+        self._proc.terminate()
+
+    def join(self, timeout: float | None = None) -> None:
+        self._proc.join(timeout)
+
+    def exit_code(self) -> int | None:
+        return self._proc.exitcode
+
+
+class _CommandHandle(ExecutorHandle):
+    def __init__(self, proc: subprocess.Popen):
+        self._proc = proc
+
+    @property
+    def pid(self) -> int | None:
+        return self._proc.pid
+
+    def is_alive(self) -> bool:
+        return self._proc.poll() is None
+
+    def terminate(self) -> None:
+        self._proc.terminate()
+
+    def join(self, timeout: float | None = None) -> None:
+        try:
+            self._proc.wait(timeout)
+        except subprocess.TimeoutExpired:
+            pass
+
+    def exit_code(self) -> int | None:
+        return self._proc.poll()
+
+
+class Launcher:
+    """Start one executor per ``launch`` call.
+
+    ``needs_secret_file`` tells the pool to materialize the shared secret
+    as a 0600 temp file before launching (command-spawned executors
+    cannot inherit driver memory)."""
+
+    needs_secret_file = False
+
+    def launch(self, spec: ExecutorSpec) -> ExecutorHandle:
+        raise NotImplementedError  # pragma: no cover - interface
+
+    def cache_key(self) -> tuple:
+        """Hashable identity for warm-pool caching: two launchers with
+        equal keys start interchangeable worlds."""
+        return (type(self).__module__, type(self).__qualname__)
+
+
+class ForkLauncher(Launcher):
+    """PR-2 semantics: fork ``executor_main`` in-process (POSIX only)."""
+
+    def launch(self, spec: ExecutorSpec) -> ExecutorHandle:
+        from .executor import executor_main
+        try:
+            mp = multiprocessing.get_context("fork")
+        except ValueError as e:  # pragma: no cover - non-POSIX platforms
+            raise RuntimeError(
+                "ForkLauncher requires the fork start method (POSIX); use "
+                "CommandLauncher or mode='local' here") from e
+        proc = mp.Process(
+            target=executor_main,
+            args=(spec.rank, spec.world,
+                  (spec.driver_host, spec.driver_port), spec.backend,
+                  spec.timeout, spec.hb_interval, spec.data_plane),
+            kwargs={"bind_host": spec.bind_host,
+                    "advertise_host": spec.advertise_host,
+                    "secret": spec.secret},
+            daemon=True)
+        proc.start()
+        return _ForkHandle(proc)
+
+
+#: the plain-subprocess instantiation of the spawn bridge; ssh/srun/
+#: kubectl templates prepend their own transport in front of {python}.
+DEFAULT_COMMAND_TEMPLATE: tuple[str, ...] = (
+    "{python}", "-m", "repro.core.cluster.executor",
+    "--rank", "{rank}", "--world", "{world}", "--driver", "{driver}",
+    "--secret-file", "{secret_file}", "--backend", "{backend}",
+    "--timeout", "{timeout}", "--hb-interval", "{hb_interval}",
+    "--data-plane", "{data_plane}", "--bind-host", "{bind_host}",
+)
+
+
+class CommandLauncher(Launcher):
+    """Spawn executors from a command template -- the module-entry
+    bootstrap that makes ssh/srun/kubectl-exec launches possible, and
+    that tests exercise via plain local subprocesses."""
+
+    needs_secret_file = True
+
+    def __init__(self, template: Sequence[str] | None = None,
+                 env: dict | None = None):
+        self.template = tuple(template) if template is not None \
+            else DEFAULT_COMMAND_TEMPLATE
+        self.env = env
+
+    def cache_key(self) -> tuple:
+        return (*super().cache_key(), self.template,
+                None if self.env is None else tuple(sorted(self.env.items())))
+
+    def launch(self, spec: ExecutorSpec) -> ExecutorHandle:
+        subst = spec.format_args()
+        argv = [part.format(**subst) for part in self.template]
+        # an advertise host must never be dropped silently: templates
+        # that don't place {advertise_host} themselves get it appended
+        # (trailing flags still reach the CLI through ssh/srun wrappers)
+        if spec.advertise_host and not any("{advertise_host}" in part
+                                           for part in self.template):
+            argv += ["--advertise-host", spec.advertise_host]
+        env = dict(os.environ if self.env is None else self.env)
+        # the module entry must find this checkout regardless of cwd
+        src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        path = env.get("PYTHONPATH", "")
+        if src_root not in path.split(os.pathsep):
+            env["PYTHONPATH"] = src_root + (os.pathsep + path if path else "")
+        # runpy warns that `-m repro.core.cluster.executor` was already
+        # imported by its own package -- expected here, not actionable
+        flt, warn = "ignore::RuntimeWarning:runpy", env.get("PYTHONWARNINGS")
+        if not warn:
+            env["PYTHONWARNINGS"] = flt
+        elif flt not in warn.split(","):
+            env["PYTHONWARNINGS"] = flt + "," + warn
+        proc = subprocess.Popen(argv, env=env)
+        return _CommandHandle(proc)

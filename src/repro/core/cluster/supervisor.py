@@ -67,7 +67,11 @@ class RunContext:
 
 @dataclasses.dataclass
 class ClusterSupervisor:
-    """Relaunch-from-checkpoint loop above ``ExecutorPool``."""
+    """Relaunch-from-checkpoint loop above ``ExecutorPool``.
+
+    ``launcher`` is honored on *every* (re)launch: a world built from
+    ssh/srun-spawned ranks is restarted the same way, never silently
+    degraded to single-host forks."""
     ckpt_dir: str
     policy: ft.RecoveryPolicy = dataclasses.field(
         default_factory=ft.RecoveryPolicy)
@@ -77,6 +81,10 @@ class ClusterSupervisor:
     hb_timeout: float = 1.0
     restart_delay: float = 0.0
     data_plane: str = "direct"
+    launcher: Any = None
+    bind_host: str = "127.0.0.1"
+    advertise_host: str | None = None
+    secret: bytes | str | None = None
 
     def __post_init__(self):
         self.state = ft.SupervisorState()
@@ -91,7 +99,11 @@ class ClusterSupervisor:
                             timeout=self.timeout,
                             data_plane=self.data_plane,
                             hb_interval=self.hb_interval,
-                            hb_timeout=self.hb_timeout)
+                            hb_timeout=self.hb_timeout,
+                            launcher=self.launcher,
+                            bind_host=self.bind_host,
+                            advertise_host=self.advertise_host,
+                            secret=self.secret)
 
     def _run_ctx(self, start: int, attempt: int) -> RunContext:
         return RunContext(

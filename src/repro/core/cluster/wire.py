@@ -19,11 +19,28 @@ with every buffer's length recorded in the manifest. Decode walks one
 ``memoryview`` over the frame -- slicing a memoryview is zero-copy, so an
 array payload is materialized by exactly one copy (the ``.copy()`` that
 gives the caller a writable array independent of the receive buffer).
+
+Authentication: every control- and data-plane connection starts with an
+HMAC-SHA256 challenge-response handshake over a shared secret. The
+listener sends a fresh random nonce; the dialer answers with its own
+nonce plus ``HMAC(secret, "client" | server_nonce | client_nonce)``; the
+listener proves itself back with the mirrored MAC. Both sides end up
+holding the *transcript* (the concatenated nonces), and the hello frame
+that follows carries ``HMAC(secret, "hello" | transcript | header)`` --
+because the transcript is unique per connection, a captured hello can
+never be replayed to register on a different connection. A dialer that
+skips the handshake (a legacy/no-secret client) sends a hello where an
+``auth_reply`` is expected and is disconnected: the protocol fails
+closed.
 """
 from __future__ import annotations
 
+import hashlib
+import hmac as _hmac
 import json
+import os
 import pickle
+import secrets as _secrets
 import socket
 import struct
 from typing import Any
@@ -34,6 +51,137 @@ _HDR = struct.Struct(">IQ")          # (header_len, payload_len)
 _MLEN = struct.Struct(">I")          # manifest length inside a payload
 
 MAX_FRAME = 1 << 34                  # 16 GiB sanity bound
+
+SECRET_ENV = "MPIGNITE_SECRET"       # fallback secret source for executors
+AUTH_TIMEOUT = 10.0                  # handshake must finish inside this
+#: frame-size bound for *unauthenticated* reads. Handshake and hello
+#: frames are a few hundred bytes; honoring MAX_FRAME before auth would
+#: let a rogue dialer pin a 16 GiB buffer per connection just by
+#: claiming a huge length prefix.
+PREAUTH_MAX_FRAME = 1 << 16
+
+
+class AuthError(ConnectionError):
+    """The peer failed (or refused) the HMAC handshake."""
+
+
+def load_secret(secret: bytes | str | None = None,
+                secret_file: str | None = None) -> bytes | None:
+    """Resolve the shared cluster secret: explicit value, then file, then
+    the ``MPIGNITE_SECRET`` environment variable, else None. A launcher
+    distributes the file; fork children inherit the value in memory.
+    Every path strips surrounding whitespace, so a driver handed
+    ``open(path).read()`` (trailing newline and all) derives the same
+    key as an executor reading the file itself."""
+    if secret is not None:
+        raw = secret.encode() if isinstance(secret, str) else bytes(secret)
+        return raw.strip()
+    if secret_file:
+        with open(secret_file, "rb") as f:
+            return f.read().strip()
+    env = os.environ.get(SECRET_ENV)
+    return env.encode().strip() if env else None
+
+
+def generate_secret() -> bytes:
+    """A fresh random shared secret (hex, so it survives files/env)."""
+    return _secrets.token_hex(16).encode()
+
+
+def _mac(secret: bytes, *parts: bytes) -> str:
+    return _hmac.new(secret, b"|".join(parts), hashlib.sha256).hexdigest()
+
+
+def _handshake_frame(sock: socket.socket, want_kind: str) -> dict:
+    frame = recv_frame(sock, limit=PREAUTH_MAX_FRAME)
+    if frame is None:
+        raise AuthError("connection closed during auth handshake")
+    header = frame[0]
+    if header.get("kind") != want_kind:
+        raise AuthError(f"expected {want_kind!r} frame during handshake, "
+                        f"got {header.get('kind')!r}")
+    return header
+
+
+def server_handshake(sock: socket.socket, secret: bytes,
+                     timeout: float = AUTH_TIMEOUT) -> bytes:
+    """Listener side of the challenge-response. Returns the connection
+    transcript on success; raises ``AuthError`` (the caller must close
+    the socket -- the stream is not trustworthy) otherwise. The
+    challenge goes out first, so a legacy dialer that leads with a hello
+    frame is rejected before any state is touched: fail closed."""
+    prev = sock.gettimeout()
+    sock.settimeout(timeout)
+    try:
+        snonce = os.urandom(16)
+        send_frame(sock, {"kind": "auth", "nonce": snonce.hex()})
+        reply = _handshake_frame(sock, "auth_reply")
+        cnonce = bytes.fromhex(reply.get("nonce", ""))
+        if len(cnonce) < 8:
+            raise AuthError("auth_reply carried no usable nonce")
+        want = _mac(secret, b"client", snonce, cnonce)
+        if not _hmac.compare_digest(want, reply.get("mac", "")):
+            raise AuthError("dialer presented a bad MAC (wrong secret)")
+        send_frame(sock, {"kind": "auth_ok",
+                          "mac": _mac(secret, b"server", cnonce, snonce)})
+        return snonce + cnonce
+    except (socket.timeout, ConnectionError, OSError, ValueError,
+            TypeError, AttributeError, KeyError) as e:
+        # TypeError/AttributeError/KeyError cover attacker-controlled
+        # JSON of the wrong shape (int nonce, array header, ...): every
+        # malformed frame must become AuthError, never escape and kill
+        # the listener's accept/reject loop
+        raise AuthError(f"auth handshake failed: {e}") from e
+    finally:
+        try:
+            sock.settimeout(prev)
+        except OSError:
+            pass
+
+
+def client_handshake(sock: socket.socket, secret: bytes,
+                     timeout: float = AUTH_TIMEOUT) -> bytes:
+    """Dialer side: answer the listener's challenge, verify the listener
+    knows the secret too (mutual auth), return the transcript."""
+    prev = sock.gettimeout()
+    sock.settimeout(timeout)
+    try:
+        challenge = _handshake_frame(sock, "auth")
+        snonce = bytes.fromhex(challenge.get("nonce", ""))
+        if len(snonce) < 8:
+            raise AuthError("challenge carried no usable nonce")
+        cnonce = os.urandom(16)
+        send_frame(sock, {"kind": "auth_reply", "nonce": cnonce.hex(),
+                          "mac": _mac(secret, b"client", snonce, cnonce)})
+        ok = _handshake_frame(sock, "auth_ok")
+        want = _mac(secret, b"server", cnonce, snonce)
+        if not _hmac.compare_digest(want, ok.get("mac", "")):
+            raise AuthError("listener presented a bad MAC (wrong secret)")
+        return snonce + cnonce
+    except (socket.timeout, ConnectionError, OSError, ValueError,
+            TypeError, AttributeError, KeyError) as e:
+        raise AuthError(f"auth handshake failed: {e}") from e
+    finally:
+        try:
+            sock.settimeout(prev)
+        except OSError:
+            pass
+
+
+def hello_mac(secret: bytes, transcript: bytes, header: dict) -> str:
+    """MAC binding a hello header to one connection's handshake. The
+    transcript nonces are fresh per connection, so this doubles as the
+    per-frame nonce that stops replayed registrations."""
+    blob = json.dumps({k: v for k, v in header.items() if k != "mac"},
+                      sort_keys=True).encode()
+    return _mac(secret, b"hello", transcript, blob)
+
+
+def verify_hello(secret: bytes, transcript: bytes, header: dict) -> bool:
+    mac = header.get("mac")
+    if not isinstance(mac, str):    # wrong JSON type must not TypeError
+        return False
+    return _hmac.compare_digest(hello_mac(secret, transcript, header), mac)
 
 
 # ---------------------------------------------------------------------------
@@ -172,16 +320,19 @@ def recv_exact(sock: socket.socket, n: int, on_bytes=None
     return buf
 
 
-def recv_frame(sock: socket.socket, on_bytes=None
+def recv_frame(sock: socket.socket, on_bytes=None, limit: int = MAX_FRAME
                ) -> tuple[dict, bytes | bytearray] | None:
     """Read one frame; None on EOF. The payload is the receive buffer
     itself (a bytearray) -- ``decode`` reads it through a memoryview, so
-    array payloads incur exactly one copy end to end."""
+    array payloads incur exactly one copy end to end. ``limit`` bounds
+    both lengths *before* any allocation; pre-auth readers pass
+    ``PREAUTH_MAX_FRAME`` so unauthenticated dialers cannot demand
+    gigabyte buffers."""
     head = recv_exact(sock, _HDR.size)
     if head is None:
         return None
     hlen, plen = _HDR.unpack(head)
-    if hlen > MAX_FRAME or plen > MAX_FRAME:
+    if hlen > limit or plen > limit:
         raise ValueError(f"oversized frame (header={hlen}, payload={plen})")
     h = recv_exact(sock, hlen)
     if h is None:

@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,

@@ -5,13 +5,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # placeholder host devices so the production meshes can be built.
 
 import argparse          # noqa: E402
-import dataclasses       # noqa: E402
 import gzip              # noqa: E402
 import json              # noqa: E402
 import subprocess        # noqa: E402
 import sys               # noqa: E402
 import time              # noqa: E402
-import traceback         # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402

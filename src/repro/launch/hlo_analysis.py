@@ -148,9 +148,7 @@ def parse_computations(text: str) -> dict[str, list[Instr]]:
         if mi is None:
             continue
         root, name, shape_str, opcode = mi.groups()
-        attrs_start = line.index(opcode + "(")
         ops_text = _operand_section(line, opcode)
-        attrs = line[attrs_start + len(ops_text):]
         operands = OPERAND_RE.findall(ops_text)
         calls, trip = [], 1
         if opcode == "while":

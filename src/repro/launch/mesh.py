@@ -4,7 +4,6 @@ count before any jax initialization)."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 
 def _mk(shape, names):

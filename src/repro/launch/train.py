@@ -14,18 +14,15 @@ onto the production mesh when more devices exist.
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 
 from ..configs import get_config
 from ..core import compat
-from ..data.pipeline import Prefetcher, SyntheticTokens, make_batch
+from ..data.pipeline import SyntheticTokens, make_batch
 from ..models.model import Model
 from ..parallel import axes as A
 from ..parallel.ops import ParallelConfig

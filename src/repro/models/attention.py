@@ -13,8 +13,6 @@ Three cores:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax import lax

@@ -18,7 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.comm import cost_scope
 from ..parallel import axes as A
-from ..parallel.ops import GlobalOps, Ops, ParallelConfig, ShardOps, remat_wrap
+from ..parallel.ops import Ops, ParallelConfig, ShardOps, remat_wrap
 from . import transformer as T
 from .common import (ModelConfig, ParamSpec, gqa_layout, replicated, stacked,
                      tree_instantiate, tree_pspecs, tree_shapes)
@@ -170,7 +170,6 @@ class Model:
                  cache, pos, s_max):
         cfg = self.cfg
         p_seg = params["blocks"][seg.name]
-        want_cache = mode != "train"
 
         if seg.kind in ("attn_mlp", "attn_moe"):
             def body(xc, inp):

@@ -164,9 +164,7 @@ def mamba2_mixer(ops: Ops, p, x, cfg: ModelConfig, cache=None,
     Returns (y, new_cache)."""
     B, S, d = x.shape
     d_in = cfg.ssm_expand * d
-    H = d_in // cfg.ssm_head_dim
     Pd = cfg.ssm_head_dim
-    N = cfg.ssm_state
     K = p["conv_x"].shape[0]
 
     w_zx = ops.weight(p["w_zx"], P(A.DATA_AXIS, A.MODEL_AXIS))

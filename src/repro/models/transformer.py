@@ -16,24 +16,21 @@ the sequence (``seq_unshard``), output projections reduce-scatter back
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..core.comm import cost_scope
 from ..parallel import axes as A
-from ..parallel.ops import Ops, ShardOps, remat_wrap
+from ..parallel.ops import Ops, ShardOps
 from . import attention as ATT
 from . import moe as MOE
 from . import ssm as SSM
 from . import xlstm as XL
 from .common import (GQALayout, ModelConfig, ParamSpec, dense_col, dense_row,
-                     gqa_layout, head_mask, replicated, stacked)
-from .layers import apply_rope, embed, logits_and_xent, logits_only, rmsnorm
-from .layers import rope_angles
+                     head_mask, replicated, stacked)
+from .layers import apply_rope, rmsnorm
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,8 +22,7 @@ fields.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

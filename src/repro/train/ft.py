@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
 
 
 class SimulatedFailure(RuntimeError):

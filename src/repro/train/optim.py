@@ -12,11 +12,9 @@ at 256 chips; factored stats are O(rows+cols).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,19 +13,15 @@ square-sum is psum'd only over the axes *present* in its PartitionSpec
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..models.common import ParamSpec, tree_pspecs
+from ..models.common import tree_pspecs
 from ..models.model import Model
 from ..parallel import axes as A
 from ..core import compat
-from ..parallel.ops import GlobalOps, ParallelConfig, ShardOps, make_ops
+from ..parallel.ops import ParallelConfig, ShardOps, make_ops
 from . import compress as C
 from .optim import Optimizer
 
@@ -104,7 +100,6 @@ def make_train_step(model: Model, opt: Optimizer, mesh: Mesh,
             from ..core.comm import cost_scope
             with cost_scope(m):
                 grads, (losses, mets) = jax.lax.scan(acc_step, acc0, mb)
-            loss = jnp.mean(losses)
             metrics = {"nll_sum": jnp.sum(mets["nll_sum"]),
                        "n_valid": jnp.sum(mets["n_valid"]),
                        "aux": jnp.mean(mets["aux"])}

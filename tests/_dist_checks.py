@@ -5,19 +5,18 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import sys                                                    # noqa: E402
 
 import jax                                                    # noqa: E402
 import jax.numpy as jnp                                       # noqa: E402
 import numpy as np                                            # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P    # noqa: E402
+from jax.sharding import NamedSharding                        # noqa: E402
 
-from repro.core import PeerComm, parallelize_func             # noqa: E402
+from repro.core import parallelize_func                       # noqa: E402
 from repro.core import compat                                 # noqa: E402
 from repro.configs import get_config                          # noqa: E402
 from repro.models.model import Model                          # noqa: E402
 from repro.parallel import axes as A                          # noqa: E402
-from repro.parallel.ops import ParallelConfig, make_ops       # noqa: E402
+from repro.parallel.ops import ParallelConfig                 # noqa: E402
 from repro.launch.mesh import make_test_mesh                  # noqa: E402
 
 
@@ -41,7 +40,6 @@ def check_split_collectives_on_mesh():
     """2-D split (rows/cols of a 2x4 grid) + allreduce/broadcast/alltoall
     against numpy oracles."""
     n = 8
-    base = np.arange(n, dtype=np.float32)
     for backend in ["native", "ring", "linear"]:
         def closure(world):
             r = world.rank()

@@ -4,7 +4,7 @@ import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st  # noqa: E402
-from hypothesis import given, settings  # noqa: E402
+from hypothesis import given  # noqa: E402
 
 from repro.core import groups as G
 

@@ -2,7 +2,6 @@
 memory model and collective byte parsing."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.launch import hlo_analysis as H

@@ -4,11 +4,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import moe as MOE
-from repro.models.model import Model
 from repro.parallel import axes as A
 from repro.parallel.ops import ParallelConfig, make_ops
 

@@ -1,5 +1,4 @@
 """Roofline term derivation + artifact plumbing."""
-import json
 
 import pytest
 

@@ -81,7 +81,7 @@ def test_async_checkpointer(tmp_path):
 def test_elastic_restore_reshards(tmp_path):
     """Save from a '1-device layout', restore onto a different sharding --
     global shapes are the contract."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1,), ("data",))
     w = np.arange(64, dtype=np.float32).reshape(8, 8)
     CKPT.save(str(tmp_path), 1, {"w": w})
