@@ -1,0 +1,78 @@
+"""Communication/compute overlap with nonblocking collectives.
+
+The DDP-style gradient-bucket pattern on the cluster runtime: each rank
+posts K ``iallreduce`` requests up front (one per "gradient bucket"),
+computes while every executor's background progress engine advances the
+ring schedules, then waits the requests -- against the identical work
+with the reductions serialized as blocking ``allreduce`` calls. On a
+multi-core host the overlapped leg finishes in roughly
+``max(compute, comm)`` instead of ``compute + comm``.
+
+    PYTHONPATH=src python examples/nonblocking_overlap.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import waitall
+from repro.core.cluster import ClusterPool
+
+N_RANKS, K_BUCKETS, BUCKET_ELEMS, DIM, MATMULS = 2, 24, 8192, 512, 3
+
+
+def _tuned():
+    """Benchmark hygiene: single-threaded BLAS (no spin-waiters starving
+    the comm threads) and a short GIL switch interval."""
+    import sys
+    sys.setswitchinterval(0.001)
+    try:
+        from threadpoolctl import threadpool_limits
+        threadpool_limits(1)
+    except ImportError:
+        pass
+
+
+def blocking_step(world):
+    _tuned()
+    xs = [np.ones(BUCKET_ELEMS) * (world.get_rank() + k)
+          for k in range(K_BUCKETS)]
+    m = np.full((DIM, DIM), 1.0 / DIM)
+    world.barrier()
+    t0 = time.perf_counter()
+    reds = [world.allreduce(x, lambda a, b: a + b) for x in xs]
+    acc = m
+    for _ in range(MATMULS):
+        acc = acc @ m
+    assert float(reds[0][0]) == float(sum(range(world.get_size())))
+    return time.perf_counter() - t0
+
+
+def overlapped_step(world):
+    _tuned()
+    xs = [np.ones(BUCKET_ELEMS) * (world.get_rank() + k)
+          for k in range(K_BUCKETS)]
+    m = np.full((DIM, DIM), 1.0 / DIM)
+    world.barrier()
+    t0 = time.perf_counter()
+    requests = [world.iallreduce(x, lambda a, b: a + b) for x in xs]
+    acc = m
+    for _ in range(MATMULS):
+        acc = acc @ m               # the progress engine reduces meanwhile
+    reds = waitall(requests, timeout=60)
+    assert float(reds[0][0]) == float(sum(range(world.get_size())))
+    return time.perf_counter() - t0
+
+
+def main():
+    with ClusterPool(N_RANKS, backend="ring") as pool:
+        for fn in (blocking_step, overlapped_step):     # warm both paths
+            pool.run(fn)
+        t_block = min(max(pool.run(blocking_step)) for _ in range(5))
+        t_over = min(max(pool.run(overlapped_step)) for _ in range(5))
+    print(f"blocking   allreduce + compute : {t_block * 1e3:6.1f} ms")
+    print(f"iallreduce overlapped compute  : {t_over * 1e3:6.1f} ms")
+    print(f"overlap speedup                : {t_block / t_over:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,8 @@ from .cluster import (ClusterComm, ClusterFuncRDD, ClusterPool,
                       CommandLauncher, ExecutorFailure, ExecutorPool,
                       ForkLauncher, get_pool, shutdown_pools)
 from .local import LocalComm, ParallelFuncRDD
-from .matching import Mailbox, MessageComm
+from .matching import (Mailbox, MessageComm, PeerDeadError, ProgressEngine,
+                       Request, waitall, waitany)
 
 __all__ = [
     "groups", "compat", "PeerComm", "cost_log", "cost_scope",
@@ -29,4 +30,5 @@ __all__ = [
     "ParallelFuncRDD", "ClusterComm", "ClusterFuncRDD", "ClusterPool",
     "CommandLauncher", "ExecutorFailure", "ExecutorPool", "ForkLauncher",
     "get_pool", "shutdown_pools", "Mailbox", "MessageComm",
+    "PeerDeadError", "ProgressEngine", "Request", "waitall", "waitany",
 ]

@@ -432,6 +432,17 @@ class ExecutorPool:
         self.broken = True
         self.dead_ranks = sorted(set(self.dead_ranks) | set(dead))
         self.broken_reason = self.broken_reason or reason
+        # tell the survivors before raising: their blocked receives and
+        # in-flight nonblocking requests must fail with PeerDeadError
+        # now, not hang out their full receive timeouts
+        note = {"kind": "ctrl", "op": "peer_dead",
+                "ranks": sorted(set(dead)), "reason": reason}
+        for r in range(self.n):
+            if r not in dead and not self._conn_dead[r]:
+                try:
+                    self._out_qs[r].put_nowait((note, b""))
+                except queue.Full:
+                    pass        # writer backlogged: the timeout still bounds
         raise ExecutorFailure(dead, reason)
 
     def run(self, fn: Callable, backend: str | None = None,

@@ -52,7 +52,7 @@ import time
 import traceback
 from typing import Any
 
-from ..matching import Mailbox, MessageComm
+from ..matching import Mailbox, MessageComm, ProgressEngine
 from . import wire
 from .serializer import loads_closure
 
@@ -79,6 +79,14 @@ class ExecutorChannel:
         # persistent executor).
         self._mailboxes: dict[int, Mailbox] = {}
         self._mb_lock = threading.Lock()
+        # one progress engine per job id (thread starts lazily on the
+        # first nonblocking collective); closed when the job is purged,
+        # so a leaked request dies with its job instead of poisoning the
+        # next pooled job's comm ctx.
+        self._engines: dict[int, ProgressEngine] = {}
+        #: reason string once the driver declared some rank dead -- new
+        #: mailboxes are born poisoned so nothing can block afterwards
+        self._peer_dead: str | None = None
         self.jobs: queue.Queue = queue.Queue()
         self.exit_requested = threading.Event()
         self.peers_ready = threading.Event()
@@ -102,22 +110,59 @@ class ExecutorChannel:
         self._hb = threading.Thread(target=self._hb_loop, daemon=True)
         self._hb.start()
 
-    # -- mailboxes ----------------------------------------------------------
+    # -- mailboxes + progress engines ---------------------------------------
     def mailbox_for(self, job: int) -> Mailbox:
         with self._mb_lock:
             mb = self._mailboxes.get(job)
             if mb is None:
                 mb = self._mailboxes[job] = Mailbox()
+                if self._peer_dead is not None:
+                    mb.poison = self._peer_dead
             return mb
 
+    def engine_for(self, job: int) -> ProgressEngine:
+        with self._mb_lock:
+            eng = self._engines.get(job)
+            if eng is None:
+                eng = self._engines[job] = ProgressEngine(
+                    name=f"mpignite-progress-r{self.rank}-j{job}")
+            return eng
+
     def purge_mailboxes_before(self, job: int) -> None:
-        """Free every mailbox belonging to a job older than ``job`` --
-        called at each dispatch, when no live closure can match those
-        messages anymore (a straggler's late frame merely recreates one
-        near-empty mailbox, reclaimed at the next purge)."""
+        """Free every mailbox (and close every progress engine) belonging
+        to a job older than ``job`` -- called at each dispatch, when no
+        live closure can match those messages anymore (a straggler's late
+        frame merely recreates one near-empty mailbox, reclaimed at the
+        next purge). Closing the engines fails any request a previous
+        closure leaked, so its parked schedules can never resume against
+        a new job's comm ctx."""
         with self._mb_lock:
             for j in [j for j in self._mailboxes if j < job]:
                 del self._mailboxes[j]
+            stale = [self._engines.pop(j) for j in list(self._engines)
+                     if j < job]
+        for eng in stale:       # close outside the lock: it joins a thread
+            eng.close("job ended with the request still pending")
+
+    def drain_job(self, job: int) -> None:
+        """End-of-job teardown: fail any request the closure leaked
+        (without waiting for the next dispatch to purge)."""
+        with self._mb_lock:
+            eng = self._engines.get(job)
+        if eng is not None:
+            eng.drain("job ended with the request still pending")
+
+    def notify_peer_dead(self, ranks: list[int], reason: str) -> None:
+        """Driver-declared rank death: poison every mailbox so blocked
+        receives and in-flight requests fail with PeerDeadError now,
+        instead of hanging to their timeouts."""
+        msg = (f"peer rank(s) {ranks} declared dead by the driver: "
+               f"{reason}")
+        with self._mb_lock:
+            self._peer_dead = msg
+            boxes = list(self._mailboxes.values())
+        for mb in boxes:
+            mb.poison_all(msg)
 
     # -- control plane ------------------------------------------------------
     def _read_loop(self):
@@ -139,6 +184,9 @@ class ExecutorChannel:
                     self.peer_addrs = {int(r): (h, p) for r, (h, p)
                                        in header["addrs"].items()}
                     self.peers_ready.set()
+                elif kind == "ctrl" and header.get("op") == "peer_dead":
+                    self.notify_peer_dead(header.get("ranks", []),
+                                          header.get("reason", ""))
                 elif kind == "ctrl" and header.get("op") == "exit":
                     break
         except (ConnectionError, OSError):
@@ -338,6 +386,11 @@ class ClusterComm(MessageComm):
     def _async_mailbox(self):
         return self._chan.mailbox_for(self._job), self._timeout
 
+    def _progress_engine(self):
+        # one engine per (rank, job): split()/with_backend() clones share
+        # it, and it dies with the job's purge
+        return self._chan.engine_for(self._job)
+
     # -- cluster extras -----------------------------------------------------
     @property
     def channel(self) -> ExecutorChannel:
@@ -430,8 +483,10 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
                            timeout=job_timeout or timeout, job=job_id)
         try:
             result = fn(comm)
+            chan.drain_job(job_id)      # leaked requests die with the job
             chan.send_result(job_id, True, wire.encode_parts(result))
         except BaseException:  # noqa: BLE001 -- ship traceback, keep serving
+            chan.drain_job(job_id)
             try:
                 chan.send_result(job_id, False,
                                  wire.encode_parts(traceback.format_exc()))

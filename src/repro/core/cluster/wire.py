@@ -237,18 +237,44 @@ def encode(obj: Any) -> bytes:
 
 
 def decode(data: bytes | bytearray | memoryview) -> Any:
+    """Inverse of ``encode``. Malformed input -- truncated buffers,
+    corrupted length prefixes, garbage manifests -- raises ``ValueError``
+    (never hangs, never escapes as a codec-internal exception type):
+    frames cross trust boundaries, so a peer's bad bytes must be a clean,
+    catchable error on the receiving rank."""
+    try:
+        return _decode_strict(data)
+    except ValueError:
+        raise
+    except (struct.error, KeyError, IndexError, TypeError, AttributeError,
+            UnicodeDecodeError, json.JSONDecodeError, EOFError,
+            pickle.UnpicklingError, ImportError, RecursionError) as e:
+        raise ValueError(f"malformed payload: {type(e).__name__}: {e}") from e
+
+
+def _decode_strict(data: bytes | bytearray | memoryview) -> Any:
     mv = memoryview(data)
     (mlen,) = _MLEN.unpack_from(mv, 0)
-    manifest = json.loads(bytes(mv[_MLEN.size:_MLEN.size + mlen]))
+    raw_manifest = mv[_MLEN.size:_MLEN.size + mlen]
+    if len(raw_manifest) != mlen:
+        raise ValueError(f"manifest length {mlen} exceeds payload "
+                         f"({len(mv)} bytes)")
+    manifest = json.loads(bytes(raw_manifest))
     pos = _MLEN.size + mlen
 
-    def dec(node):
+    def take(n) -> memoryview:
         nonlocal pos
+        if not isinstance(n, int) or n < 0 or pos + n > len(mv):
+            raise ValueError(f"buffer of {n!r} bytes at offset {pos} "
+                             f"overruns payload ({len(mv)} bytes)")
+        raw = mv[pos:pos + n]            # memoryview slice: no copy
+        pos += n
+        return raw
+
+    def dec(node):
         t = node["t"]
         if t == "nd":
-            n = node["n"]
-            raw = mv[pos:pos + n]        # memoryview slice: no copy
-            pos += n
+            raw = take(node["n"])
             arr = np.frombuffer(raw, dtype=_dtype_from_name(node["d"]))
             return arr.reshape(node["s"]).copy()   # the one copy
         if t == "np":
@@ -262,10 +288,7 @@ def decode(data: bytes | bytearray | memoryview) -> Any:
         if t == "dict":
             return {k: dec(v) for k, v in zip(node["k"], node["v"])}
         if t == "pkl":
-            n = node["n"]
-            raw = mv[pos:pos + n]
-            pos += n
-            return pickle.loads(raw)
+            return pickle.loads(take(node["n"]))
         raise ValueError(f"bad manifest node type {t!r}")
 
     return dec(manifest)

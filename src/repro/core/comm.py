@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import groups as G
+from .matching import Request
 
 # ---------------------------------------------------------------------------
 # Cost logging
@@ -46,6 +47,8 @@ _COST_LOG: contextvars.ContextVar[list | None] = contextvars.ContextVar(
     "mpignite_cost_log", default=None)
 _COST_MULT: contextvars.ContextVar[int] = contextvars.ContextVar(
     "mpignite_cost_mult", default=1)
+_COST_OVERLAP: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "mpignite_cost_overlap", default=False)
 
 
 @contextlib.contextmanager
@@ -76,7 +79,20 @@ def _log(op: str, backend: str, nbytes: int, steps: int) -> None:
     if log is not None:
         mult = _COST_MULT.get()
         log.append(G.CollectiveCost(op, backend, int(nbytes) * mult,
-                                    int(steps) * mult))
+                                    int(steps) * mult,
+                                    overlap=_COST_OVERLAP.get()))
+
+
+@contextlib.contextmanager
+def _overlap_scope():
+    """Everything logged inside was issued through a nonblocking wrapper:
+    mark it overlappable so the roofline can discount it against
+    compute (XLA's latency-hiding scheduler is free to move it)."""
+    tok = _COST_OVERLAP.set(True)
+    try:
+        yield
+    finally:
+        _COST_OVERLAP.reset(tok)
 
 
 _REDUCERS = {
@@ -308,6 +324,35 @@ class PeerComm:
             acc = jnp.where(rank >= shift, combine(acc, moved), acc)
             shift *= 2
         return acc
+
+    # -- nonblocking wrappers (MPI-3 shape) ---------------------------------
+    # In SPMD the runtime cannot defer a collective at the Python level --
+    # XLA's latency-hiding scheduler IS the progress engine, free to
+    # overlap any collective whose result is not yet consumed. These
+    # wrappers keep one program text valid across all three modes: they
+    # trace the collective eagerly, flag its logged cost as overlappable,
+    # and return a born-complete ``Request`` whose ``wait`` yields the
+    # traced value (the data dependency the compiler schedules around).
+
+    def iallreduce(self, x, op="add", *, tag: int = 0) -> Request:
+        with _overlap_scope():
+            return Request.completed(self.allreduce(x, op, tag=tag),
+                                     op="iallreduce")
+
+    def iallgather(self, x, *, axis: int = 0, tiled: bool = False) -> Request:
+        with _overlap_scope():
+            return Request.completed(
+                self.allgather(x, axis=axis, tiled=tiled), op="iallgather")
+
+    def ibcast(self, x, root: int = 0) -> Request:
+        with _overlap_scope():
+            return Request.completed(self.broadcast(x, root), op="ibcast")
+
+    ibroadcast = ibcast
+
+    def ibarrier(self) -> Request:
+        with _overlap_scope():
+            return Request.completed(self.barrier(), op="ibarrier")
 
     # -- pytree conveniences ----------------------------------------------------
     def tree_allreduce(self, tree, op="add"):

@@ -153,6 +153,10 @@ class CollectiveCost:
     backend: str
     bytes_per_device: int
     steps: int
+    #: logged from inside a nonblocking (i*) collective: these bytes are
+    #: candidates for communication/compute overlap, so roofline terms
+    #: may discount them against the compute term instead of serializing.
+    overlap: bool = False
 
 
 def collective_cost(op: str, backend: str, nbytes: int, p: int) -> CollectiveCost:

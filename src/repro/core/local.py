@@ -24,19 +24,28 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable
 
-from .matching import Mailbox, MessageComm
+from .matching import Mailbox, MessageComm, ProgressEngine
 
 # Backwards-compatible alias: the mailbox used to live here.
 _Mailbox = Mailbox
 
 
 class _World:
-    """Shared state for one execute(): one mailbox per world rank."""
+    """Shared state for one execute(): one mailbox (and one nonblocking
+    progress engine -- thread started lazily on first use) per world rank."""
 
     def __init__(self, size: int, timeout: float = 30.0):
         self.size = size
         self.timeout = timeout
         self.mailboxes = [Mailbox() for _ in range(size)]
+        self.engines = [ProgressEngine(name=f"mpignite-progress-r{r}")
+                        for r in range(size)]
+
+    def close(self) -> None:
+        """End-of-execute teardown: fail every leaked request and stop
+        the progress threads."""
+        for eng in self.engines:
+            eng.close("world torn down with the request still pending")
 
 
 class LocalComm(MessageComm):
@@ -68,6 +77,10 @@ class LocalComm(MessageComm):
         me = self._group[self._rank]
         return self._world.mailboxes[me], self._world.timeout
 
+    def _progress_engine(self):
+        # split()/with_backend() clones share the rank's one engine
+        return self._world.engines[self._group[self._rank]]
+
 
 class ParallelFuncRDD:
     """Return type of ``parallelize_func`` in local mode -- mirrors the
@@ -96,13 +109,17 @@ class ParallelFuncRDD:
 
         threads = [threading.Thread(target=run, args=(r,), daemon=True)
                    for r in range(n)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join(self._timeout)
-            if t.is_alive():
-                raise TimeoutError("parallel closure deadlocked (implicit "
-                                   "barrier at closure end never reached)")
+        try:
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(self._timeout)
+                if t.is_alive():
+                    raise TimeoutError("parallel closure deadlocked "
+                                       "(implicit barrier at closure end "
+                                       "never reached)")
+        finally:
+            world.close()       # leaked requests die with the world
         for e in errors:
             if e is not None:
                 raise e

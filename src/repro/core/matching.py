@@ -27,14 +27,22 @@ import hashlib
 import heapq
 import itertools
 import os
+import queue
 import threading
 import time
 from collections import deque
+from concurrent import futures as _futures
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Generator, Sequence
 
 from . import groups as G
+
+
+class PeerDeadError(ConnectionError):
+    """A peer rank died while an operation depended on it: the failure
+    detector declared the world broken, so every pending receive (blocking
+    or request-backed) is failed instead of waiting out its timeout."""
 
 #: algorithms available to message-composed collectives. ``linear`` is the
 #: paper's phase-1 (every byte relays through a root/master); ``ring`` is
@@ -86,16 +94,23 @@ class _Waiter:
     """One pending ``receive_async``: a Future registered on a mailbox key.
     Claiming (under the mailbox lock) decides exactly one outcome --
     delivery by ``Mailbox.put`` or expiry by the shared ``_Expiry``
-    thread -- so the two can never both complete the Future."""
-    __slots__ = ("mailbox", "key", "fut", "deadline", "claimed")
+    thread -- so the two can never both complete the Future.
+
+    ``inline=True`` (progress-engine waiters) completes the Future on the
+    delivering thread instead of hopping through the shared deliver pool:
+    the engine's done-callback only enqueues a token, so it is safe on a
+    transport reader, and skipping the hop halves the per-step wakeup
+    latency a nonblocking collective pays under CPU contention."""
+    __slots__ = ("mailbox", "key", "fut", "deadline", "claimed", "inline")
 
     def __init__(self, mailbox: "Mailbox", key: tuple, fut: Future,
-                 deadline: float):
+                 deadline: float, inline: bool = False):
         self.mailbox = mailbox
         self.key = key
         self.fut = fut
         self.deadline = deadline
         self.claimed = False
+        self.inline = inline
 
     def expire(self) -> None:
         with self.mailbox.lock:
@@ -113,6 +128,25 @@ class _Waiter:
         ctx, tag, src = self.key
         _deliver_pool().submit(self.fut.set_exception, TimeoutError(
             f"receive(src={src}, tag={tag}, ctx={ctx}) timed out"))
+
+    def cancel(self) -> bool:
+        """Claim the waiter for cancellation (MPI_Cancel on a receive):
+        the message, if it ever arrives, stays buffered for someone else."""
+        with self.mailbox.lock:
+            if self.claimed:
+                return False
+            self.claimed = True
+            dq = self.mailbox.waiters.get(self.key)
+            if dq is not None:
+                try:
+                    dq.remove(self)
+                except ValueError:
+                    pass
+                if not dq:
+                    del self.mailbox.waiters[self.key]
+        _deliver_pool().submit(self.fut.set_exception,
+                               _futures.CancelledError())
+        return True
 
 
 class _Expiry(threading.Thread):
@@ -171,9 +205,30 @@ class Mailbox:
     cond: threading.Condition = None  # type: ignore[assignment]
     queues: dict[tuple[int, int, int], deque] = field(default_factory=dict)
     waiters: dict[tuple[int, int, int], deque] = field(default_factory=dict)
+    #: non-None once the failure detector declared a peer dead: every
+    #: receive that would block raises PeerDeadError(poison) instead.
+    poison: str | None = None
 
     def __post_init__(self):
         self.cond = threading.Condition(self.lock)
+
+    def poison_all(self, reason: str) -> None:
+        """Fail every pending receive and every future blocking one with
+        ``PeerDeadError(reason)``. Already-buffered messages stay
+        deliverable (a matched message that arrived before the death is
+        still a valid receive)."""
+        with self.lock:
+            if self.poison is not None:
+                return
+            self.poison = reason
+            doomed = [w for dq in self.waiters.values() for w in dq
+                      if not w.claimed]
+            for w in doomed:
+                w.claimed = True
+            self.waiters.clear()
+            self.cond.notify_all()
+        for w in doomed:
+            _deliver_pool().submit(w.fut.set_exception, PeerDeadError(reason))
 
     def put(self, ctx: int, tag: int, src: int, payload: Any) -> None:
         key = (ctx, tag, src)
@@ -192,10 +247,13 @@ class Mailbox:
                 self.queues.setdefault(key, deque()).append(payload)
                 self.cond.notify_all()
         if deliver is not None:
-            # complete on the shared delivery worker, not this (possibly
-            # transport-reader) thread: user done-callbacks may block or
-            # re-enter the mailbox
-            _deliver_pool().submit(deliver.fut.set_result, payload)
+            if deliver.inline:      # engine waiter: callback just enqueues
+                deliver.fut.set_result(payload)
+            else:
+                # complete on the shared delivery worker, not this (possibly
+                # transport-reader) thread: user done-callbacks may block or
+                # re-enter the mailbox
+                _deliver_pool().submit(deliver.fut.set_result, payload)
 
     def get(self, ctx: int, tag: int, src: int, timeout: float) -> Any:
         key = (ctx, tag, src)
@@ -210,17 +268,21 @@ class Mailbox:
                     if not q:
                         del self.queues[key]
                     return payload
+                if self.poison is not None:
+                    raise PeerDeadError(self.poison)
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self.cond.wait(timeout=remaining):
                     raise TimeoutError(
                         f"receive(src={src}, tag={tag}, ctx={ctx}) timed out")
 
     def get_async(self, ctx: int, tag: int, src: int,
-                  timeout: float) -> Future:
+                  timeout: float, inline: bool = False) -> Future:
         """Matched receive as a Future, without dedicating a thread to the
         wait: if the message is buffered the Future completes immediately;
         otherwise a ``_Waiter`` is registered and ``put`` completes it on
-        arrival (the shared ``_Expiry`` thread enforces the deadline)."""
+        arrival (the shared ``_Expiry`` thread enforces the deadline).
+        ``inline`` marks the waiter safe for on-thread completion (see
+        ``_Waiter``); only the progress engine passes True."""
         key = (ctx, tag, src)
         fut: Future = Future()
         fut.set_running_or_notify_cancel()
@@ -230,14 +292,267 @@ class Mailbox:
                 payload = q.popleft()
                 if not q:
                     del self.queues[key]
+            elif self.poison is not None:
+                fut.set_exception(PeerDeadError(self.poison))
+                return fut
             else:
                 w = _Waiter(self, key, fut,
-                            time.monotonic() + timeout)
+                            time.monotonic() + timeout, inline=inline)
                 self.waiters.setdefault(key, deque()).append(w)
                 _Expiry.instance().add(w)
+                fut.mpignite_waiter = w     # cancel hook for Request
                 return fut
         fut.set_result(payload)
         return fut
+
+
+# ---------------------------------------------------------------------------
+# Nonblocking requests + progress engine
+# ---------------------------------------------------------------------------
+
+class Request:
+    """Handle for a nonblocking operation (MPI_Request). Returned by
+    ``isend``/``irecv`` and the nonblocking collectives; settled by the
+    transport (irecv: mailbox arrival) or the per-rank progress engine
+    (collectives). ``wait`` ~ MPI_Wait, ``test`` ~ MPI_Test, ``cancel`` ~
+    MPI_Cancel; module-level ``waitall``/``waitany`` complete sets."""
+    __slots__ = ("_fut", "op", "_cancel_hook")
+
+    def __init__(self, fut: Future, op: str = "",
+                 cancel_hook: Callable[[], bool] | None = None):
+        self._fut = fut
+        self.op = op
+        self._cancel_hook = cancel_hook
+
+    @classmethod
+    def completed(cls, value: Any = None, op: str = "") -> "Request":
+        fut: Future = Future()
+        fut.set_result(value)
+        return cls(fut, op=op)
+
+    @property
+    def future(self) -> Future:
+        return self._fut
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def wait(self, timeout: float | None = None) -> Any:
+        """Block until the operation completes; return its value.
+        Raises what the operation raised (``TimeoutError`` when the
+        underlying receive deadline expired, ``PeerDeadError`` when the
+        failure detector declared a participant dead) -- or
+        ``TimeoutError`` if ``timeout`` elapses first (the request stays
+        pending; wait again)."""
+        try:
+            return self._fut.result(timeout)
+        except _futures.TimeoutError:
+            if self._fut.done():
+                # py3.11+: futures.TimeoutError aliases the builtin, so a
+                # deadline-expired receive (terminal failure stored IN the
+                # future) lands here too -- re-raise it, don't rewrite a
+                # dead request as merely pending
+                raise
+            raise TimeoutError(
+                f"request {self.op or 'op'} not complete within {timeout}s "
+                "(still pending)") from None
+
+    def test(self) -> tuple[bool, Any]:
+        """(done, value) without blocking -- MPI_Test. ``value`` is None
+        while pending; a failed operation raises here, like ``wait``."""
+        if not self._fut.done():
+            return False, None
+        return True, self._fut.result(timeout=0)
+
+    def exception(self) -> BaseException | None:
+        return self._fut.exception() if self._fut.done() else None
+
+    def cancel(self) -> bool:
+        """Best-effort cancel of a still-pending operation. True iff this
+        call retired the request; a completed/failed request returns
+        False. A cancelled request's ``wait`` raises CancelledError."""
+        if self._fut.done():
+            return False
+        if self._cancel_hook is not None:
+            return bool(self._cancel_hook())
+        return self._fut.cancel()
+
+
+def waitall(requests: Sequence[Request],
+            timeout: float | None = None) -> list:
+    """Complete every request (MPI_Waitall); returns their values in
+    order. The first failure propagates; ``timeout`` bounds the whole
+    set, not each member."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    out = []
+    for req in requests:
+        left = None if deadline is None else deadline - time.monotonic()
+        if left is not None and left <= 0:
+            raise TimeoutError(f"waitall timed out with request "
+                               f"{req.op or 'op'} still pending")
+        out.append(req.wait(left))
+    return out
+
+
+def waitany(requests: Sequence[Request],
+            timeout: float | None = None) -> tuple[int, Any]:
+    """Block until at least one request completes (MPI_Waitany); returns
+    ``(index, value)`` of the first completed one (failures propagate)."""
+    if not requests:
+        raise ValueError("waitany needs at least one request")
+    done, _ = _futures.wait([r.future for r in requests], timeout=timeout,
+                            return_when=_futures.FIRST_COMPLETED)
+    if not done:
+        raise TimeoutError(f"waitany: none of {len(requests)} requests "
+                           f"completed within {timeout}s")
+    for i, req in enumerate(requests):
+        if req.future in done:
+            return i, req.wait(0)
+    raise AssertionError("unreachable")     # pragma: no cover
+
+
+class _Schedule:
+    """One in-flight nonblocking collective: a resumable generator plus
+    the Future its Request exposes. The generator performs its sends
+    inline and yields ``(ctx, tag, src_world)`` for every receive."""
+    __slots__ = ("gen", "fut", "mailbox", "timeout", "cancelled")
+
+    def __init__(self, gen: Generator, fut: Future, mailbox: Mailbox,
+                 timeout: float):
+        self.gen = gen
+        self.fut = fut
+        self.mailbox = mailbox
+        self.timeout = timeout
+        self.cancelled = False
+
+
+class ProgressEngine:
+    """Per-rank background engine that advances nonblocking collective
+    schedules off the caller's thread (the MPI 'progress thread').
+
+    A schedule runs to its next receive on the engine thread; the engine
+    parks it as a mailbox waiter (``get_async``) and resumes it with the
+    payload when ``Mailbox.put`` completes the waiter -- so any number of
+    outstanding collectives cost one thread total, and the caller is free
+    to compute while communication advances underneath (the overlap that
+    blocking collectives make impossible).
+
+    The thread starts lazily on the first ``submit`` and dies with
+    ``close``; ``drain`` fails every outstanding request (job teardown:
+    a leaked request must not poison the next pooled job)."""
+
+    def __init__(self, name: str = "mpignite-progress"):
+        self._name = name
+        self._q: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._thread: threading.Thread | None = None
+        self._pending: set[_Schedule] = set()
+        self._closed = False
+
+    @property
+    def pending_count(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def submit(self, gen: Generator, mailbox: Mailbox, timeout: float,
+               op: str = "") -> Request:
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        sched = _Schedule(gen, fut, mailbox, timeout)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"progress engine {self._name} is closed")
+            self._pending.add(sched)
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._run, daemon=True,
+                                                name=self._name)
+                self._thread.start()
+        self._q.put((sched, None, None))
+
+        def cancel_hook() -> bool:
+            sched.cancelled = True
+            try:        # the engine may complete it concurrently: the
+                fut.set_exception(_futures.CancelledError())    # Future
+            except _futures.InvalidStateError:      # arbitrates the race
+                return False
+            return True
+        return Request(fut, op=op, cancel_hook=cancel_hook)
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            self._advance(*item)
+
+    def _advance(self, sched: _Schedule, value: Any,
+                 exc: BaseException | None) -> None:
+        if sched.fut.done():        # cancelled or drained while parked
+            self._retire(sched)
+            sched.gen.close()
+            return
+        try:
+            if exc is not None:
+                op = sched.gen.throw(exc)
+            else:
+                op = sched.gen.send(value)
+        except StopIteration as s:
+            self._retire(sched)
+            try:
+                sched.fut.set_result(s.value)
+            except _futures.InvalidStateError:
+                pass        # drained/cancelled concurrently
+        except BaseException as e:  # noqa: BLE001 -- user reduce fn may raise
+            self._retire(sched)
+            try:
+                sched.fut.set_exception(e)
+            except _futures.InvalidStateError:
+                pass
+        else:
+            ctx, tag, src = op
+            rfut = sched.mailbox.get_async(ctx, tag, src, sched.timeout,
+                                           inline=True)
+
+            def arrived(f: Future, sched=sched) -> None:
+                e = f.exception()
+                if e is not None:
+                    self._q.put((sched, None, e))
+                else:
+                    self._q.put((sched, f.result(), None))
+            rfut.add_done_callback(arrived)
+
+    def _retire(self, sched: _Schedule) -> None:
+        with self._lock:
+            self._pending.discard(sched)
+
+    def drain(self, reason: str = "progress engine drained with the "
+                                  "request still pending") -> int:
+        """Fail every outstanding request; returns how many were failed.
+        Parked schedules settle immediately (their mailbox waiter, when
+        it fires or expires, finds the Future already done and the
+        schedule is retired without resuming user code)."""
+        with self._lock:
+            doomed = list(self._pending)
+            self._pending.clear()
+        n = 0
+        for sched in doomed:
+            sched.cancelled = True
+            try:
+                sched.fut.set_exception(PeerDeadError(reason))
+                n += 1
+            except _futures.InvalidStateError:
+                pass        # completed concurrently: nothing to fail
+        return n
+
+    def close(self, reason: str = "progress engine closed with the "
+                                  "request still pending") -> None:
+        self.drain(reason)
+        with self._lock:
+            self._closed = True
+            thread = self._thread
+        self._q.put(None)
+        if thread is not None and thread is not threading.current_thread():
+            thread.join(timeout=5.0)
 
 
 class _CallCounter:
@@ -357,6 +672,15 @@ class MessageComm:
 
     # -- collectives composed from p2p (phase-1 ``linear`` routes through
     #    the root; phase-2 ``ring`` circulates peer-to-peer) -----------------
+    #
+    # Each multi-step collective is written ONCE, as a resumable schedule
+    # generator: sends execute inline, receives are ``yield``ed as
+    # ``(ctx, tag, src_world)`` descriptors. The blocking API drives the
+    # generator synchronously (``_run_sched``); the nonblocking API hands
+    # the same generator to the per-rank ``ProgressEngine``, which parks
+    # it as a mailbox waiter between steps -- one algorithm, two
+    # completion disciplines, conformant by construction.
+
     def _next_key(self) -> tuple:
         return (*self._epoch, self._ctx, self._calls.next())
 
@@ -368,25 +692,33 @@ class MessageComm:
         return self._get(stable_ctx(self._ctx, tag, key), tag,
                          self._group[src])
 
-    def barrier(self) -> None:
-        """Message-realized barrier: gather a token at rank 0, then release
-        everyone (works over any transport, unlike threading.Barrier)."""
-        tag = -10
-        key = self._next_key()
+    def _recv_op(self, src: int, tag: int, key: tuple) -> tuple:
+        """The receive descriptor a schedule yields: directly the
+        ``(ctx, tag, src_world)`` match key of the awaited message."""
+        return (stable_ctx(self._ctx, tag, key), tag, self._group[src])
+
+    def _run_sched(self, gen) -> Any:
+        """Drive a schedule generator to completion with blocking
+        receives on the caller's thread -- the blocking collectives."""
+        try:
+            op = next(gen)
+            while True:
+                op = gen.send(self._get(*op))
+        except StopIteration as s:
+            return s.value
+
+    def _barrier_sched(self, tag: int, key: tuple):
         p = len(self._group)
         if self._rank == 0:
             for r in range(1, p):
-                self._recv_coll(r, tag, key)
+                yield self._recv_op(r, tag, key)
             for r in range(1, p):
                 self._send_coll(r, tag, key, None)
         else:
             self._send_coll(0, tag, key, None)
-            self._recv_coll(0, tag, key)
+            yield self._recv_op(0, tag, key)
 
-    def broadcast(self, root: int, data: Any = None) -> Any:
-        """comm.broadcast[T](root, data): only the root's payload matters."""
-        tag = -2  # reserved collective tag space
-        key = self._next_key()
+    def _broadcast_sched(self, root: int, data: Any, tag: int, key: tuple):
         p = len(self._group)
         if self._backend == "ring":
             # pass-along ring from root: root -> root+1 -> ... (P-1 hops)
@@ -394,7 +726,7 @@ class MessageComm:
                 if p > 1:
                     self._send_coll((root + 1) % p, tag, key, data)
                 return data
-            data = self._recv_coll((self._rank - 1) % p, tag, key)
+            data = yield self._recv_op((self._rank - 1) % p, tag, key)
             if (self._rank + 1) % p != root:
                 self._send_coll((self._rank + 1) % p, tag, key, data)
             return data
@@ -403,19 +735,9 @@ class MessageComm:
                 if r != root:
                     self._send_coll(r, tag, key, data)
             return data
-        return self._recv_coll(root, tag, key)
+        return (yield self._recv_op(root, tag, key))
 
-    def allreduce(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
-        """comm.allReduce[T](data, f) with an arbitrary reduction function
-        (the paper's enhancement over MPI's fixed op set).
-
-        linear (phase-1): gather to rank 0, fold in comm-rank order,
-        broadcast back -- deterministic for non-commutative ``f``.
-        ring (phase-2): circulate values around the ring, each rank folding
-        as they arrive -- ``f`` must be associative and commutative (same
-        restriction as the SPMD ring backend)."""
-        tag = -3
-        key = self._next_key()
+    def _allreduce_sched(self, data: Any, f: Callable, tag: int, key: tuple):
         p = len(self._group)
         if p == 1:
             return data
@@ -425,22 +747,20 @@ class MessageComm:
             left = (self._rank - 1) % p
             for _ in range(p - 1):
                 self._send_coll(right, tag, key, v)
-                v = self._recv_coll(left, tag, key)
+                v = yield self._recv_op(left, tag, key)
                 acc = f(acc, v)
             return acc
         if self._rank == 0:
             acc = data
             for r in range(1, p):
-                acc = f(acc, self._recv_coll(r, tag, key))
+                acc = f(acc, (yield self._recv_op(r, tag, key)))
             for r in range(1, p):
                 self._send_coll(r, tag, key, acc)
             return acc
         self._send_coll(0, tag, key, data)
-        return self._recv_coll(0, tag, key)
+        return (yield self._recv_op(0, tag, key))
 
-    def allgather(self, data: Any) -> list:
-        tag = -4
-        key = self._next_key()
+    def _allgather_sched(self, data: Any, tag: int, key: tuple):
         p = len(self._group)
         if p == 1:
             return [data]
@@ -452,17 +772,111 @@ class MessageComm:
             v = data
             for step in range(p - 1):
                 self._send_coll(right, tag, key, v)
-                v = self._recv_coll(left, tag, key)
+                v = yield self._recv_op(left, tag, key)
                 out[(self._rank - step - 1) % p] = v
             return out
         if self._rank == 0:
             for r in range(1, p):
-                out[r] = self._recv_coll(r, tag, key)
+                out[r] = yield self._recv_op(r, tag, key)
             for r in range(1, p):
                 self._send_coll(r, tag, key, out)
             return out
         self._send_coll(0, tag, key, data)
-        return self._recv_coll(0, tag, key)
+        return (yield self._recv_op(0, tag, key))
+
+    def barrier(self) -> None:
+        """Message-realized barrier: gather a token at rank 0, then release
+        everyone (works over any transport, unlike threading.Barrier)."""
+        return self._run_sched(self._barrier_sched(-10, self._next_key()))
+
+    def broadcast(self, root: int, data: Any = None) -> Any:
+        """comm.broadcast[T](root, data): only the root's payload matters."""
+        return self._run_sched(
+            self._broadcast_sched(root, data, -2, self._next_key()))
+
+    def allreduce(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
+        """comm.allReduce[T](data, f) with an arbitrary reduction function
+        (the paper's enhancement over MPI's fixed op set).
+
+        linear (phase-1): gather to rank 0, fold in comm-rank order,
+        broadcast back -- deterministic for non-commutative ``f``.
+        ring (phase-2): circulate values around the ring, each rank folding
+        as they arrive -- ``f`` must be associative and commutative (same
+        restriction as the SPMD ring backend)."""
+        return self._run_sched(
+            self._allreduce_sched(data, f, -3, self._next_key()))
+
+    def allgather(self, data: Any) -> list:
+        return self._run_sched(
+            self._allgather_sched(data, -4, self._next_key()))
+
+    # -- nonblocking API (MPI-3 shape): Request-returning twins -------------
+    def _progress_engine(self) -> ProgressEngine:
+        """The engine advancing this rank's nonblocking collectives.
+        Transports with a shared per-rank home (LocalComm's world slot,
+        ClusterComm's channel+job) override this; the base fallback keeps
+        one lazily-created engine per communicator object."""
+        eng = getattr(self, "_engine", None)
+        if eng is None:
+            eng = self._engine = ProgressEngine(
+                name=f"mpignite-progress-r{self._rank}")
+        return eng
+
+    def _submit_sched(self, gen, op: str) -> Request:
+        mb = self._async_mailbox()
+        if mb is None:
+            raise NotImplementedError(
+                "nonblocking collectives need a mailbox-backed transport "
+                "(LocalComm / ClusterComm); this transport has none")
+        mailbox, timeout = mb
+        return self._progress_engine().submit(gen, mailbox, timeout, op=op)
+
+    def isend(self, dst: int, tag: int, data: Any) -> Request:
+        """MPI_Isend. MPIgnite sends are always nonblocking and buffered
+        at the receiver, so the request is born complete -- it exists for
+        API symmetry (waitall over mixed send/recv requests)."""
+        self.send(dst, tag, data)
+        return Request.completed(None, op="isend")
+
+    def irecv(self, src: int, tag: int) -> Request:
+        """MPI_Irecv: a Request completed by message arrival (waiter
+        registration on this rank's mailbox -- zero threads parked),
+        failed by deadline expiry or peer death. Supports ``cancel``."""
+        mb = self._async_mailbox()
+        if mb is None:                      # thread-per-call fallback
+            return Request(self.receive_async(src, tag), op="irecv")
+        mailbox, timeout = mb
+        fut = mailbox.get_async(self._ctx, tag, self._group[src], timeout)
+        waiter = getattr(fut, "mpignite_waiter", None)
+        hook = waiter.cancel if waiter is not None else None
+        return Request(fut, op="irecv", cancel_hook=hook)
+
+    def ibarrier(self) -> Request:
+        """Nonblocking barrier: completes when every rank has entered."""
+        return self._submit_sched(self._barrier_sched(-10, self._next_key()),
+                                  op="ibarrier")
+
+    def ibcast(self, root: int, data: Any = None) -> Request:
+        """Nonblocking broadcast; ``wait`` returns the root's payload."""
+        return self._submit_sched(
+            self._broadcast_sched(root, data, -2, self._next_key()),
+            op="ibcast")
+
+    ibroadcast = ibcast
+
+    def iallreduce(self, data: Any, f: Callable[[Any, Any], Any]) -> Request:
+        """Nonblocking allreduce: the ring/linear schedule advances on the
+        progress engine while the caller computes -- the MPI-3 overlap
+        primitive (``wait`` returns the reduced value)."""
+        return self._submit_sched(
+            self._allreduce_sched(data, f, -3, self._next_key()),
+            op="iallreduce")
+
+    def iallgather(self, data: Any) -> Request:
+        """Nonblocking allgather; ``wait`` returns the rank-ordered list."""
+        return self._submit_sched(
+            self._allgather_sched(data, -4, self._next_key()),
+            op="iallgather")
 
     def reducescatter(self, chunks: Sequence[Any], f: Callable) -> Any:
         """Each rank contributes a list of P chunks; rank i gets the f-fold

@@ -61,11 +61,25 @@ def spmd_split(world):
     return row.allreduce(jnp.float32(world.rank()), "add")
 
 
+def runtime_iallreduce(world):
+    # nonblocking: post the reduction, compute locally while the progress
+    # engine advances it, then wait -- same value as the blocking op
+    req = world.iallreduce(float(world.get_rank() + 1), lambda a, b: a + b)
+    local = sum(float(i) for i in range(100))
+    return req.wait() + local * 0.0
+
+
+def spmd_iallreduce(world):
+    req = world.iallreduce(jnp.float32(world.rank() + 1), "add")
+    return req.wait()
+
+
 OPS = {
     "ring_p2p": (runtime_ring_p2p, spmd_ring_p2p),
     "allreduce": (runtime_allreduce, spmd_allreduce),
     "allgather": (runtime_allgather, spmd_allgather),
     "split": (runtime_split, spmd_split),
+    "iallreduce": (runtime_iallreduce, spmd_iallreduce),
 }
 
 

@@ -16,6 +16,8 @@ from repro.core.cluster import (ClusterFuncRDD, ClusterPool,
                                 ExecutorPool, get_pool, wire)
 from repro.train import ft
 
+pytestmark = pytest.mark.cluster       # own CI job: real process worlds
+
 
 # ---------------------------------------------------------------------------
 # Wire protocol

@@ -1,0 +1,177 @@
+"""Cross-mode collective conformance matrix.
+
+Every collective -- blocking and nonblocking -- runs over mode {local
+threads, cluster-relay, cluster-direct} x backend {linear, ring} and is
+compared bit-exact against a numpy oracle computed in the test process.
+Payloads are int64 so the fold order (rank-ordered at the linear root,
+rotation-ordered around the ring) cannot perturb the bits: any mismatch
+is a routing/matching bug, not a float artifact.
+
+This is the systematic replacement for the ad-hoc per-mode spot checks
+that previously lived scattered across test_cluster/test_cross_mode.
+Cluster legs dispatch into warm pools (one per data plane, cached by
+``get_pool``), so the whole matrix costs two bootstraps total.
+"""
+import numpy as np
+import pytest
+
+from repro.core import parallelize_func
+from repro.core.cluster import get_pool
+
+pytestmark = pytest.mark.cluster
+
+N = 4
+ROOT = 1
+
+
+def _base(rank: int) -> np.ndarray:
+    return np.arange(6, dtype=np.int64).reshape(2, 3) * (rank + 1) + rank
+
+
+# -- closures (one per collective; `backend` arrives via the runtime) -------
+
+def clo_barrier(world):
+    world.barrier()
+    return "past"
+
+
+def clo_broadcast(world):
+    r = world.get_rank()
+    return world.broadcast(ROOT, _base(ROOT) if r == ROOT else None)
+
+
+def clo_allreduce(world):
+    return world.allreduce(_base(world.get_rank()), lambda a, b: a + b)
+
+
+def clo_allgather(world):
+    return world.allgather(world.get_rank() * 2 + 1)
+
+
+def clo_reduce(world):
+    return world.reduce(ROOT, _base(world.get_rank()), lambda a, b: a + b)
+
+
+def clo_gather(world):
+    return world.gather(ROOT, world.get_rank() * 3)
+
+
+def clo_scan(world):
+    return world.scan(np.int64(world.get_rank() + 5), lambda a, b: a + b)
+
+
+def clo_alltoall(world):
+    r = world.get_rank()
+    return world.alltoall([r * 10 + j for j in range(world.get_size())])
+
+
+def clo_reducescatter(world):
+    r = world.get_rank()
+    chunks = [np.full(3, r + d, np.int64) for d in range(world.get_size())]
+    return world.reducescatter(chunks, lambda a, b: a + b)
+
+
+def clo_ibarrier(world):
+    return world.ibarrier().wait(timeout=30) or "past"
+
+
+def clo_ibcast(world):
+    r = world.get_rank()
+    req = world.ibcast(ROOT, _base(ROOT) if r == ROOT else None)
+    return req.wait(timeout=30)
+
+
+def clo_iallreduce(world):
+    req = world.iallreduce(_base(world.get_rank()), lambda a, b: a + b)
+    return req.wait(timeout=30)
+
+
+def clo_iallgather(world):
+    return world.iallgather(world.get_rank() * 2 + 1).wait(timeout=30)
+
+
+def _oracle():
+    """Expected per-rank results, computed with plain numpy."""
+    allred = sum((_base(r) for r in range(N)),
+                 np.zeros((2, 3), np.int64))
+    scan = np.cumsum([r + 5 for r in range(N)])
+    rs_sum = sum(range(N))
+    return {
+        "barrier": ["past"] * N,
+        "broadcast": [_base(ROOT)] * N,
+        "allreduce": [allred] * N,
+        "allgather": [[r * 2 + 1 for r in range(N)]] * N,
+        "reduce": [allred if r == ROOT else None for r in range(N)],
+        "gather": [[s * 3 for s in range(N)] if r == ROOT else None
+                   for r in range(N)],
+        "scan": [np.int64(scan[r]) for r in range(N)],
+        "alltoall": [[j * 10 + r for j in range(N)] for r in range(N)],
+        "reducescatter": [np.full(3, rs_sum + N * r, np.int64)
+                          for r in range(N)],
+        "ibarrier": ["past"] * N,
+        "ibcast": [_base(ROOT)] * N,
+        "iallreduce": [allred] * N,
+        "iallgather": [[r * 2 + 1 for r in range(N)]] * N,
+    }
+
+
+CLOSURES = {
+    "barrier": clo_barrier, "broadcast": clo_broadcast,
+    "allreduce": clo_allreduce, "allgather": clo_allgather,
+    "reduce": clo_reduce, "gather": clo_gather, "scan": clo_scan,
+    "alltoall": clo_alltoall, "reducescatter": clo_reducescatter,
+    "ibarrier": clo_ibarrier, "ibcast": clo_ibcast,
+    "iallreduce": clo_iallreduce, "iallgather": clo_iallgather,
+}
+
+ORACLE = _oracle()
+
+
+def _eq(a, b) -> bool:
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        a, b = np.asarray(a), np.asarray(b)
+        return (a.dtype == b.dtype and a.shape == b.shape
+                and np.array_equal(a, b))
+    if isinstance(a, (list, tuple)):
+        return (isinstance(b, (list, tuple)) and len(a) == len(b)
+                and all(_eq(x, y) for x, y in zip(a, b)))
+    return type(a) is type(b) and a == b
+
+
+def _run(closure, mode: str, backend: str) -> list:
+    if mode == "local":
+        return parallelize_func(closure, backend=backend,
+                                timeout=60).execute(N)
+    plane = mode.split("-", 1)[1]
+    pool = get_pool(N, data_plane=plane)
+    return pool.run(closure, backend=backend, timeout=60)
+
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("backend", ["linear", "ring"])
+@pytest.mark.parametrize("mode", ["local", "cluster-relay",
+                                  "cluster-direct"])
+@pytest.mark.parametrize("op", sorted(CLOSURES))
+def test_collective_conformance(op, mode, backend):
+    out = _run(CLOSURES[op], mode, backend)
+    want = ORACLE[op]
+    assert len(out) == len(want)
+    for rank, (got, expect) in enumerate(zip(out, want)):
+        assert _eq(got, expect), (op, mode, backend, rank, got, expect)
+
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("mode", ["local", "cluster-direct"])
+def test_ring_equals_linear_for_commutative_fold(mode):
+    """The two message backends realize the same mathematical collective
+    for commutative folds: bit-identical int results across the whole op
+    set (the matrix above pins each to the oracle; this pins them to
+    each other within one process world)."""
+    def closure(world):
+        r = world.get_rank()
+        return (world.allreduce(_base(r), lambda a, b: a + b).tolist(),
+                world.allgather(r),
+                world.iallreduce(np.int64(r), lambda a, b: a + b).wait(30))
+    lin = _run(closure, mode, "linear")
+    ring = _run(closure, mode, "ring")
+    assert lin == ring

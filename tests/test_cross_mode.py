@@ -11,9 +11,12 @@ import sys
 import pytest
 
 
+pytestmark = pytest.mark.cluster       # own CI job: subprocess + compile
+
+
 @pytest.mark.timeout(300)
 @pytest.mark.parametrize("op", ["ring_p2p", "allreduce", "allgather",
-                                "split"])
+                                "split", "iallreduce"])
 def test_cross_mode_equivalence(op):
     script = os.path.join(os.path.dirname(__file__), "_cross_mode_check.py")
     env = dict(os.environ)

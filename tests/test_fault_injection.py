@@ -1,0 +1,151 @@
+"""Fault injection against the nonblocking layer: a rank is SIGKILLed
+while its peers are blocked in ``Request.wait`` on an in-flight
+iallreduce. Pending requests must fail promptly with ``PeerDeadError``
+(the driver's failure detector notifies survivors via a ``peer_dead``
+control frame -- nobody waits out the full receive timeout), and
+``ClusterSupervisor`` checkpoint-restart recovery must still complete
+the workload on a fresh pool."""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ExecutorFailure, ExecutorPool, PeerDeadError)
+from repro.core.cluster import ClusterSupervisor
+from repro.train import ft
+
+pytestmark = pytest.mark.cluster
+
+#: receive/job timeout far above the detection path: if survivors only
+#: unblocked by timing out, the elapsed assertions below would fail.
+SLOW_TIMEOUT = 30.0
+
+
+def _write_marker(d: str, rank: int, elapsed: float, exc: BaseException):
+    with open(os.path.join(d, f"rank{rank}"), "w") as f:
+        f.write(f"{elapsed:.3f}|{type(exc).__name__}|{exc}")
+
+
+def _read_markers(d: str) -> dict[int, tuple[float, str, str]]:
+    out = {}
+    for name in os.listdir(d):
+        if name.startswith("rank"):
+            elapsed, kind, msg = open(os.path.join(d, name)).read().split(
+                "|", 2)
+            out[int(name[4:])] = (float(elapsed), kind, msg)
+    return out
+
+
+@pytest.mark.timeout(120)
+def test_sigkill_mid_iallreduce_fails_requests_and_recovers(tmp_path):
+    """The acceptance path: SIGKILL rank 2 while ranks {0,1,3} are blocked
+    in Request.wait on an in-flight ring iallreduce. Every survivor's
+    request fails with PeerDeadError well before the 30s receive timeout,
+    the driver raises ExecutorFailure, and the supervisor completes the
+    workload on a relaunched world."""
+    n = 4
+    marker_dir = str(tmp_path / "markers")
+    os.makedirs(marker_dir)
+
+    def make_closure(run):
+        def closure(comm):
+            rank = comm.get_rank()
+            if run.attempt == 0:
+                if rank == 2:
+                    time.sleep(0.4)     # let peers park in Request.wait
+                    os.kill(os.getpid(), signal.SIGKILL)
+                req = comm.iallreduce(np.full(256, float(rank)),
+                                      lambda a, b: a + b)
+                t0 = time.monotonic()
+                try:
+                    req.wait(timeout=SLOW_TIMEOUT)
+                except PeerDeadError as e:
+                    _write_marker(marker_dir, rank,
+                                  time.monotonic() - t0, e)
+                    raise
+                return "attempt-0 completed?!"
+            red = comm.allreduce(np.full(256, float(rank)),
+                                 lambda a, b: a + b)
+            return float(red[0])
+        return closure
+
+    policy = ft.RecoveryPolicy(degrade_backend="linear", recovery_steps=1,
+                               max_restarts=2)
+    sup = ClusterSupervisor(str(tmp_path / "ckpt"), policy=policy,
+                            fast_backend="ring", timeout=SLOW_TIMEOUT,
+                            hb_interval=0.05, hb_timeout=0.8)
+    out = sup.run(make_closure, n)
+
+    # recovery completed with correct results on the relaunched world
+    assert out == [float(sum(range(n)))] * n
+    assert sup.state.restarts == 1 and len(sup.failures) == 1
+
+    markers = _read_markers(marker_dir)
+    assert sorted(markers) == [0, 1, 3], markers     # every survivor
+    for rank, (elapsed, kind, msg) in markers.items():
+        assert kind == "PeerDeadError", (rank, kind, msg)
+        assert "declared dead" in msg and "2" in msg
+        # unblocked by the peer_dead notification, not the 30s deadline
+        assert elapsed < SLOW_TIMEOUT / 3, (rank, elapsed)
+
+
+@pytest.mark.timeout(120)
+def test_peer_death_fails_blocking_receive_and_irecv(tmp_path):
+    """The poison covers every receive discipline: a blocking receive and
+    a pending irecv Request targeting (or transitively stuck behind) the
+    dead rank both fail with PeerDeadError, promptly."""
+    marker_dir = str(tmp_path)
+
+    def closure(world):
+        rank = world.get_rank()
+        if rank == 2:
+            time.sleep(0.3)
+            world.die()     # abrupt exit: no result frame, no goodbye
+        t0 = time.monotonic()
+        try:
+            if rank == 0:
+                world.receive(2, 9)                 # blocking receive
+            else:
+                world.irecv(2, 9).wait(timeout=SLOW_TIMEOUT)
+        except PeerDeadError as e:
+            _write_marker(marker_dir, rank, time.monotonic() - t0, e)
+            raise
+        return "completed?!"
+
+    pool = ExecutorPool(3, timeout=SLOW_TIMEOUT, hb_interval=0.05,
+                        hb_timeout=0.8)
+    try:
+        with pytest.raises(ExecutorFailure) as ei:
+            pool.run(closure)
+        assert 2 in ei.value.dead_ranks
+        deadline = time.monotonic() + 10    # markers are written by the
+        while time.monotonic() < deadline:  # executors after the driver
+            if len(_read_markers(marker_dir)) == 2:     # already raised
+                break
+            time.sleep(0.05)
+    finally:
+        pool.shutdown()
+    markers = _read_markers(marker_dir)
+    assert sorted(markers) == [0, 1], markers
+    for rank, (elapsed, kind, _) in markers.items():
+        assert kind == "PeerDeadError"
+        assert elapsed < SLOW_TIMEOUT / 3, (rank, elapsed)
+
+
+@pytest.mark.timeout(60)
+def test_buffered_messages_survive_poison():
+    """Poison fails only *pending* receives: a message that arrived
+    before the death is still deliverable (no data loss for matched
+    traffic)."""
+    from repro.core import Mailbox
+    mb = Mailbox()
+    mb.put(0, 1, 5, "arrived-before-death")
+    fut_pending = mb.get_async(0, 2, 7, timeout=30)
+    mb.poison_all("rank 7 declared dead")
+    with pytest.raises(PeerDeadError):
+        fut_pending.result(timeout=5)
+    assert mb.get(0, 1, 5, timeout=1) == "arrived-before-death"
+    with pytest.raises(PeerDeadError):      # next blocking receive fails
+        mb.get(0, 1, 5, timeout=1)

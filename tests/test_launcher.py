@@ -24,6 +24,8 @@ from repro.core.cluster import (ClusterPool, ClusterSupervisor,
                                 ForkLauncher, wire)
 from repro.train import ft
 
+pytestmark = pytest.mark.cluster       # own CI job: spawned worlds
+
 
 def _make_ring():
     """The paper's listing-2 token ring, built as a *nested* function:

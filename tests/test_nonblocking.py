@@ -1,0 +1,333 @@
+"""Nonblocking MPI semantics: Request lifecycle (wait/test/cancel,
+waitall/waitany), the per-rank progress engine advancing collective
+schedules off the caller's thread, overlap of multiple outstanding
+operations, and request hygiene (leaks, timeouts, teardown)."""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core import (Mailbox, PeerDeadError, ProgressEngine, Request,
+                        parallelize_func, waitall, waitany)
+
+
+# ---------------------------------------------------------------------------
+# Request object semantics
+# ---------------------------------------------------------------------------
+
+def test_isend_irecv_roundtrip():
+    def closure(world):
+        rank, size = world.get_rank(), world.get_size()
+        sreq = world.isend((rank + 1) % size, 7, rank * 11)
+        rreq = world.irecv((rank - 1) % size, 7)
+        assert sreq.done()          # sends are always-nonblocking: born done
+        assert sreq.wait() is None
+        return rreq.wait(timeout=10)
+    out = parallelize_func(closure).execute(4)
+    assert out == [(r - 1) % 4 * 11 for r in range(4)]
+
+
+def test_irecv_test_transitions():
+    def closure(world):
+        if world.get_rank() == 0:
+            req = world.irecv(1, 0)
+            before = req.test()
+            world.send(1, 1, "go")              # unblock the sender
+            val = req.wait(timeout=10)
+            after = req.test()
+            return before, val, after
+        world.receive(0, 1)                     # hold until rank 0 polled
+        world.send(0, 0, "payload")
+        return None
+    out = parallelize_func(closure).execute(2)
+    before, val, after = out[0]
+    assert before == (False, None)
+    assert val == "payload"
+    assert after == (True, "payload")
+
+
+def test_request_wait_timeout_leaves_request_pending():
+    """wait(timeout) expiring raises TimeoutError but does not retire the
+    request -- a later wait can still complete it (MPI_Test semantics of
+    repeated polling)."""
+    def closure(world):
+        if world.get_rank() == 0:
+            req = world.irecv(1, 0)
+            with pytest.raises(TimeoutError, match="still pending"):
+                req.wait(timeout=0.1)
+            world.send(1, 1, "now")
+            return req.wait(timeout=10)
+        world.receive(0, 1)
+        world.send(0, 0, "late")
+        return None
+    out = parallelize_func(closure).execute(2)
+    assert out[0] == "late"
+
+
+def test_irecv_deadline_expiry_raises_timeout():
+    """The transport receive deadline fails the request itself -- an
+    unbounded ``wait()`` cannot hang past the mailbox deadline."""
+    mb = Mailbox()
+    req = Request(mb.get_async(0, 99, 1, timeout=0.2), op="irecv")
+    with pytest.raises(TimeoutError, match="tag=99"):
+        req.wait()
+    assert req.done()
+
+
+def test_cancel_irecv_preserves_late_message():
+    def closure(world):
+        if world.get_rank() == 0:
+            req = world.irecv(1, 3)
+            assert req.cancel() is True
+            assert req.cancel() is False        # already retired
+            with pytest.raises(CancelledError):
+                req.wait(timeout=5)
+            world.send(1, 1, "go")
+            # the cancelled receive must not have consumed the message
+            return world.receive(1, 3)
+        world.receive(0, 1)
+        world.send(0, 3, "kept")
+        return None
+    # sender waits for "go" before sending, so the cancel always precedes
+    # the message: deterministic, not racy
+    out = parallelize_func(closure).execute(2)
+    assert out[0] == "kept"
+
+
+def test_waitall_and_waitany():
+    def closure(world):
+        rank, size = world.get_rank(), world.get_size()
+        reqs = [world.irecv(src, 10 + src) for src in range(size)
+                if src != rank]
+        for dst in range(size):
+            if dst != rank:
+                world.send(dst, 10 + rank, rank)
+        vals = waitall(reqs, timeout=10)
+        idx, first = waitany([world.iallreduce(1, lambda a, b: a + b)],
+                             timeout=10)
+        return sorted(vals), idx, first
+    out = parallelize_func(closure).execute(3)
+    for rank, (vals, idx, first) in enumerate(out):
+        assert vals == sorted(r for r in range(3) if r != rank)
+        assert (idx, first) == (0, 3)
+
+
+def test_waitany_timeout():
+    with pytest.raises(TimeoutError, match="none of 1"):
+        mb = Mailbox()
+        fut = mb.get_async(0, 0, 1, timeout=30)
+        waitany([Request(fut, op="irecv")], timeout=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Nonblocking collectives + the progress engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["linear", "ring"])
+def test_nonblocking_collectives_match_blocking(backend):
+    def closure(world):
+        rank = world.get_rank()
+        data = np.arange(5, dtype=np.int64) * (rank + 1)
+        r1 = world.iallreduce(data, lambda a, b: a + b)
+        r2 = world.iallgather(rank * 3)
+        r3 = world.ibcast(2, "root-val" if rank == 2 else None)
+        r4 = world.ibarrier()
+        got = waitall([r1, r2, r3, r4], timeout=20)
+        want = [world.allreduce(data, lambda a, b: a + b),
+                world.allgather(rank * 3),
+                world.broadcast(2, "root-val" if rank == 2 else None),
+                world.barrier()]
+        return [np.array_equal(got[0], want[0])] + \
+            [g == w for g, w in zip(got[1:], want[1:])]
+    out = parallelize_func(closure, backend=backend).execute(4)
+    assert out == [[True, True, True, True]] * 4
+
+
+def test_interleaved_nonblocking_and_blocking_collectives():
+    """A pending iallreduce and a subsequent blocking allreduce draw
+    distinct keys from the shared call counter: neither cross-matches."""
+    def closure(world):
+        rank = world.get_rank()
+        req = world.iallreduce(np.int64(rank), lambda a, b: a + b)
+        blocking = world.allreduce(np.int64(rank * 100), lambda a, b: a + b)
+        return int(req.wait(timeout=20)), int(blocking)
+    out = parallelize_func(closure).execute(4)
+    assert out == [(6, 600)] * 4
+
+
+def test_many_outstanding_requests_one_progress_thread():
+    """Eight outstanding iallreduce schedules advance on ONE engine
+    thread per rank -- not thread-per-request."""
+    K = 8
+
+    def closure(world):
+        rank = world.get_rank()
+        before = threading.active_count()
+        reqs = [world.iallreduce(np.int64(rank + k), lambda a, b: a + b)
+                for k in range(K)]
+        in_flight = threading.active_count()
+        vals = [int(v) for v in waitall(reqs, timeout=30)]
+        return vals, in_flight - before
+    out = parallelize_func(closure).execute(3)
+    for vals, extra in out:
+        assert vals == [sum(r + k for r in range(3)) for k in range(K)]
+        # active_count is process-global: at most one engine per rank
+        # plus the shared deliver/expiry threads -- NOT +K per rank
+        assert extra <= 6, extra
+
+
+def test_ibarrier_holds_until_all_enter():
+    def closure(world):
+        if world.get_rank() == 0:
+            world.receive(1, 1)         # enter the barrier last
+            return world.ibarrier().wait(timeout=10)
+        req = world.ibarrier()
+        time.sleep(0.15)
+        held = req.test()[0]            # rank 0 hasn't entered yet
+        world.send(0, 1, "enter")
+        req.wait(timeout=10)
+        return held
+    out = parallelize_func(closure).execute(2)
+    assert out[1] is False
+
+
+def test_overlap_computation_advances_during_wait():
+    """The schedule advances while the caller computes: total time for
+    (iallreduce + sleep) stays well under (allreduce + sleep) serial."""
+    delay = 0.3
+
+    def closure(world):
+        rank = world.get_rank()
+        # handshake so every rank starts its clock together
+        world.barrier()
+        t0 = time.monotonic()
+        req = world.iallreduce(np.full(1000, float(rank)),
+                               lambda a, b: a + b)
+        time.sleep(delay)               # "compute"
+        red = req.wait(timeout=20)
+        elapsed = time.monotonic() - t0
+        return float(red[0]), elapsed
+    out = parallelize_func(closure).execute(3)
+    for red, elapsed in out:
+        assert red == 3.0
+        # the collective finished inside the sleep window: no extra
+        # serial communication phase after compute
+        assert elapsed < delay + 0.2, elapsed
+
+
+# ---------------------------------------------------------------------------
+# Engine hygiene: drain, leaks, teardown
+# ---------------------------------------------------------------------------
+
+def test_engine_drain_fails_pending_requests():
+    mb = Mailbox()
+    eng = ProgressEngine(name="test-drain")
+
+    def sched():
+        yield (0, 0, 1)                 # a receive that never matches
+
+    req = eng.submit(sched(), mb, timeout=30, op="iallreduce")
+    assert not req.done()
+    assert eng.drain("test teardown") == 1
+    with pytest.raises(PeerDeadError, match="test teardown"):
+        req.wait(timeout=5)
+    eng.close()
+
+
+def test_engine_submit_after_close_refused():
+    eng = ProgressEngine(name="test-closed")
+    eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(iter(()), Mailbox(), timeout=1, op="x")
+
+
+def test_cancel_pending_collective():
+    mb = Mailbox()
+    eng = ProgressEngine(name="test-cancel")
+
+    def sched():
+        yield (0, 0, 1)
+
+    req = eng.submit(sched(), mb, timeout=30, op="iallreduce")
+    assert req.cancel() is True
+    with pytest.raises(CancelledError):
+        req.wait(timeout=5)
+    eng.close()
+
+
+def test_local_leaked_request_does_not_wedge_execute():
+    """A closure returning with a request still pending must not hang
+    the world join; teardown fails the leaked request."""
+    def closure(world):
+        world.irecv((world.get_rank() + 1) % 2, 42)     # leaked
+        return world.get_rank()
+    assert parallelize_func(closure, timeout=5).execute(2) == [0, 1]
+
+
+@pytest.mark.cluster
+def test_pool_leaked_request_does_not_poison_next_job():
+    """Cluster teardown contract: a job that leaks a pending request (and
+    a half-matched iallreduce) ends cleanly, and the SAME warm pool runs
+    the next job with correct results -- stale schedules cannot resume
+    into the new job's comm ctx."""
+    from repro.core import ClusterPool
+
+    def leaky(world):
+        world.irecv((world.get_rank() + 1) % 3, 5)      # never sent
+        if world.get_rank() != 0:
+            # rank 0 skips the collective: peers' schedules stay parked
+            world.iallreduce(np.int64(1), lambda a, b: a + b)
+        return "leaked"
+
+    def clean(world):
+        return int(world.allreduce(np.int64(world.get_rank()),
+                                   lambda a, b: a + b))
+
+    with ClusterPool(3, timeout=20) as pool:
+        assert pool.run(leaky) == ["leaked"] * 3
+        assert pool.run(clean) == [3, 3, 3]
+        assert pool.run(clean, backend="ring") == [3, 3, 3]
+
+
+@pytest.mark.cluster
+def test_cluster_nonblocking_matches_local():
+    def closure(world):
+        rank = world.get_rank()
+        r1 = world.iallreduce(np.arange(4, dtype=np.int64) * rank,
+                              lambda a, b: a + b)
+        r2 = world.iallgather(rank)
+        r3 = world.ibcast(1, rank * 7 if rank == 1 else None)
+        red, gat, bc = waitall([r1, r2, r3], timeout=20)
+        return red.tolist(), gat, bc
+
+    want = parallelize_func(closure).execute(3)
+    got = parallelize_func(closure).execute(3, mode="cluster")
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# SPMD wrappers: overlap-aware cost logging
+# ---------------------------------------------------------------------------
+
+def test_overlap_scope_marks_cost_entries():
+    from repro.core import cost_log
+    from repro.core.comm import _log, _overlap_scope
+    with cost_log() as log:
+        _log("allreduce", "ring", 128, 3)
+        with _overlap_scope():
+            _log("allreduce", "ring", 128, 3)
+    assert [c.overlap for c in log] == [False, True]
+    assert log[0].bytes_per_device == log[1].bytes_per_device == 128
+
+
+def test_peercomm_request_api_presence():
+    """Figure-1 style parity: the nonblocking surface exists on both
+    communicator families with the same spelling."""
+    from repro.core import LocalComm, PeerComm
+    for cls in (LocalComm, PeerComm):
+        for m in ("iallreduce", "iallgather", "ibcast", "ibarrier"):
+            assert hasattr(cls, m), (cls, m)
+    for m in ("isend", "irecv"):
+        assert hasattr(LocalComm, m)

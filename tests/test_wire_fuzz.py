@@ -1,0 +1,281 @@
+"""Wire-codec fuzzing: property-based round-trips (hypothesis, skipped
+where it isn't installed) plus always-on adversarial cases -- truncated
+frames, corrupted length prefixes, oversized pre-auth frames, random
+garbage -- asserting clean ``ValueError``/``ConnectionError`` outcomes
+rather than hangs, giant allocations, or codec-internal tracebacks."""
+import random
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import wire
+
+# ---------------------------------------------------------------------------
+# Bit-exact comparison helpers (NaNs and all)
+# ---------------------------------------------------------------------------
+
+
+def _bits_equal(a, b) -> bool:
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        if not isinstance(b, type(a)):
+            return False
+        return (a.dtype == b.dtype and a.shape == b.shape
+                and np.ascontiguousarray(a).tobytes()
+                == np.ascontiguousarray(b).tobytes())
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and set(a) == set(b)
+                and all(_bits_equal(a[k], b[k]) for k in a))
+    if isinstance(a, (list, tuple)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(_bits_equal(x, y) for x, y in zip(a, b)))
+    return type(a) is type(b) and a == b
+
+
+# ---------------------------------------------------------------------------
+# Seeded random round-trip fuzz (runs everywhere, no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+_DTYPES = [np.int8, np.uint8, np.int16, np.uint32, np.int64, np.float16,
+           np.float32, np.float64, np.complex64, np.bool_]
+
+
+def _random_tree(rng: random.Random, depth: int = 0):
+    roll = rng.random()
+    if depth >= 3 or roll < 0.45:
+        kind = rng.randrange(6)
+        if kind == 0:
+            return None
+        if kind == 1:
+            return rng.randint(-2**40, 2**40)
+        if kind == 2:
+            return rng.random() * 1e6 - 5e5
+        if kind == 3:
+            return "".join(chr(rng.randrange(32, 0x2FF))
+                           for _ in range(rng.randrange(8)))
+        if kind == 4:
+            return rng.random() < 0.5
+        shape = tuple(rng.randrange(4) for _ in range(rng.randrange(4)))
+        dt = np.dtype(rng.choice(_DTYPES))
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        raw = rng.getrandbits(8 * nbytes).to_bytes(nbytes, "little") \
+            if nbytes else b""
+        return np.frombuffer(raw, dtype=dt).reshape(shape).copy()
+    if roll < 0.65:
+        return [_random_tree(rng, depth + 1)
+                for _ in range(rng.randrange(4))]
+    if roll < 0.85:
+        return tuple(_random_tree(rng, depth + 1)
+                     for _ in range(rng.randrange(3)))
+    return {f"k{i}": _random_tree(rng, depth + 1)
+            for i in range(rng.randrange(4))}
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_random_pytree_roundtrip_bit_exact(seed):
+    rng = random.Random(seed)
+    obj = _random_tree(rng)
+    out = wire.decode(wire.encode(obj))
+    assert _bits_equal(obj, out), (obj, out)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_truncated_payload_raises_value_error(seed):
+    """Every strict prefix of a valid encoding decodes to ValueError --
+    never an allocation blow-up, a hang, or a stray exception type."""
+    rng = random.Random(1000 + seed)
+    blob = wire.encode(_random_tree(rng))
+    if len(blob) < 2:
+        pytest.skip("degenerate tiny encoding")
+    cut = rng.randrange(1, len(blob))
+    try:
+        wire.decode(blob[:cut])
+    except ValueError:
+        pass        # the contract
+    # a prefix that still satisfies the manifest (trailing don't-care
+    # bytes truncated) may legitimately decode: success is also fine
+
+
+@pytest.mark.parametrize("seed", range(60))
+def test_single_byte_corruption_is_contained(seed):
+    """Arbitrary single-byte corruption either still decodes or raises
+    ValueError -- codec internals (struct/json/numpy errors) never
+    escape raw."""
+    rng = random.Random(2000 + seed)
+    obj = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+           "b": [1, "two", None], "c": (np.int64(7),)}
+    blob = bytearray(wire.encode(obj))
+    blob[rng.randrange(len(blob))] ^= 1 << rng.randrange(8)
+    try:
+        wire.decode(bytes(blob))
+    except ValueError:
+        pass
+
+
+def test_garbage_bytes_raise_value_error():
+    for blob in [b"", b"\x00", b"\xff" * 3, b"\xff" * 64,
+                 b"{not json}" * 10, bytes(range(256))]:
+        with pytest.raises(ValueError):
+            wire.decode(blob)
+
+
+def test_corrupted_manifest_length_prefix():
+    blob = bytearray(wire.encode({"x": 1}))
+    struct.pack_into(">I", blob, 0, 2**31)      # mlen far beyond payload
+    with pytest.raises(ValueError, match="manifest length"):
+        wire.decode(bytes(blob))
+
+
+def test_manifest_buffer_overrun_is_bounded():
+    """A manifest claiming a giant buffer must fail by bounds check,
+    not by attempting the allocation/copy."""
+    import json
+    manifest = json.dumps({"t": "nd", "n": 2**40, "d": "float64",
+                           "s": [2**37]}).encode()
+    blob = struct.pack(">I", len(manifest)) + manifest + b"\x00" * 16
+    with pytest.raises(ValueError, match="overruns payload"):
+        wire.decode(blob)
+
+
+def test_negative_buffer_length_rejected():
+    import json
+    manifest = json.dumps({"t": "pkl", "n": -5}).encode()
+    blob = struct.pack(">I", len(manifest)) + manifest
+    with pytest.raises(ValueError):
+        wire.decode(blob)
+
+
+# ---------------------------------------------------------------------------
+# Framing-level adversarial input (socket pairs)
+# ---------------------------------------------------------------------------
+
+def test_oversized_preauth_frame_rejected_before_allocation():
+    """A dialer claiming a 2 GiB frame before authenticating must be
+    refused at the length prefix -- PREAUTH_MAX_FRAME bounds both
+    lengths before any buffer is allocated."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack(">IQ", 16, 1 << 31))
+        with pytest.raises(ValueError, match="oversized frame"):
+            wire.recv_frame(b, limit=wire.PREAUTH_MAX_FRAME)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_oversized_payload_rejected_post_auth_too():
+    """Even authenticated peers are bounded by MAX_FRAME (16 GiB)."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack(">IQ", 16, 1 << 35))
+        with pytest.raises(ValueError, match="oversized frame"):
+            wire.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_truncated_mid_payload_is_connection_error():
+    a, b = socket.socketpair()
+    try:
+        header = b'{"kind":"msg"}'
+        a.sendall(struct.pack(">IQ", len(header), 100) + header + b"x" * 10)
+        a.close()       # EOF with 90 payload bytes missing
+        with pytest.raises(ConnectionError, match="mid-frame"):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_clean_eof_at_frame_boundary_is_none():
+    a, b = socket.socketpair()
+    try:
+        wire.send_frame(a, {"kind": "hb"}, b"ok")
+        a.close()
+        frame = wire.recv_frame(b)
+        assert frame is not None and frame[0] == {"kind": "hb"}
+        assert wire.recv_frame(b) is None
+    finally:
+        b.close()
+
+
+def test_wrong_secret_dial_fails_closed_fast():
+    """Auth fuzz: a dialer with the wrong secret is rejected with
+    AuthError on both ends, promptly (no hang waiting for frames)."""
+    server, client = socket.socketpair()
+    results = {}
+
+    def serve():
+        try:
+            wire.server_handshake(server, b"right-secret", timeout=5.0)
+            results["server"] = "accepted"
+        except wire.AuthError:
+            results["server"] = "refused"
+
+    t = threading.Thread(target=serve)
+    t.start()
+    with pytest.raises(wire.AuthError):
+        wire.client_handshake(client, b"wrong-secret", timeout=5.0)
+    t.join(timeout=10)
+    assert results.get("server") == "refused"
+    server.close()
+    client.close()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (CI installs hypothesis; skipped without it)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    from hypothesis.extra import numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:     # container without hypothesis: seeded fuzz above
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _scalar = st.one_of(
+        st.none(), st.booleans(), st.integers(),
+        st.floats(allow_nan=False),     # NaN in arrays is covered bitwise;
+        st.text(max_size=16))           # a bare JSON NaN breaks == oracle
+
+    _array = st.one_of(*[
+        hnp.arrays(dtype=dt, shape=hnp.array_shapes(max_dims=3, max_side=4))
+        for dt in (np.int8, np.uint16, np.int64, np.float32, np.float64,
+                   np.bool_)])
+
+    _tree = st.recursive(
+        st.one_of(_scalar, _array),
+        lambda children: st.one_of(
+            st.lists(children, max_size=3),
+            st.tuples(children, children),
+            st.dictionaries(st.text(max_size=6), children, max_size=3)),
+        max_leaves=10)
+
+    @settings(max_examples=120, deadline=None)
+    @given(obj=_tree)
+    def test_property_roundtrip_arbitrary_pytrees(obj):
+        out = wire.decode(wire.encode(obj))
+        assert _bits_equal(obj, out)
+
+    @settings(max_examples=120, deadline=None)
+    @given(obj=_tree, data=st.data())
+    def test_property_mutations_contained(obj, data):
+        """Truncations and byte flips of any valid encoding either decode
+        or raise ValueError -- no other exception type, ever."""
+        blob = bytearray(wire.encode(obj))
+        if len(blob) == 0:
+            return
+        if data.draw(st.booleans(), label="truncate"):
+            cut = data.draw(st.integers(0, len(blob) - 1), label="cut")
+            blob = blob[:cut]
+        else:
+            i = data.draw(st.integers(0, len(blob) - 1), label="pos")
+            blob[i] ^= data.draw(st.integers(1, 255), label="xor")
+        try:
+            wire.decode(bytes(blob))
+        except ValueError:
+            pass
