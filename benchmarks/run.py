@@ -241,6 +241,70 @@ def bench_listing2_ring_overlap(quick: bool):
     ROWS.append((f"listing2_ring_overlap_speedup_n{n}", 0.0, verdict))
 
 
+SEGMENTED_ACCEPTANCE = 2.0  # segmented ring must beat whole-buffer by >=2x
+
+
+def bench_listing2_ring_segmented(quick: bool):
+    """Bandwidth-bound ring allreduce at 8 MiB: the segmented
+    reduce-scatter/all-gather schedule (~2S(p-1)/p bytes per rank,
+    default 256 KiB segments) against the whole-buffer message ring
+    ((p-1)S bytes per rank), both on the same warm direct-plane pool.
+    At n=8 the wire-byte ratio is 4x, so the >=2x acceptance leaves
+    headroom for per-segment overheads and noisy CI neighbors; a result
+    below it emits a FAILED row that ``--check`` turns into a nonzero
+    exit."""
+    from repro.core.cluster import get_pool
+    n = 8
+    elems = (8 << 20) // 8              # 8 MiB of float64
+    reps = 3 if quick else 5
+
+    def closure(world):
+        x = np.ones(elems, np.float64) * (world.get_rank() + 1)
+        world.barrier()                 # clocks start together
+        t0 = time.perf_counter()
+        # np.add (a ufunc) is what makes plain `ring` eligible for the
+        # automatic segmented upgrade -- the exact path users hit
+        red = world.allreduce(x, np.add)
+        dt = time.perf_counter() - t0
+        assert float(red[0]) == float(sum(range(1, world.get_size() + 1)))
+        return dt
+
+    pool = get_pool(n, data_plane="direct")
+    # whole-buffer leg: segment_bytes=0 disables the automatic segmented
+    # upgrade; segmented leg: None defers to the 256 KiB default
+    legs = {"whole": 0, "chunked": None}
+    for seg in legs.values():           # warm both code paths
+        pool.run(closure, backend="ring", timeout=120, segment_bytes=seg)
+    times = {k: [] for k in legs}
+
+    def measure(rounds):
+        for _ in range(rounds):         # interleaved: drift hits both legs
+            for k, seg in legs.items():
+                times[k].append(max(pool.run(closure, backend="ring",
+                                             timeout=120,
+                                             segment_bytes=seg)))
+        return min(times["whole"]) * 1e6, min(times["chunked"]) * 1e6
+
+    t_whole, t_seg = measure(reps)
+    if t_whole / t_seg < SEGMENTED_ACCEPTANCE:
+        # one deeper retry before declaring a regression (noisy-neighbor
+        # transients compress the ratio; a real regression stays below)
+        t_whole, t_seg = measure(2 * reps)
+
+    ROWS.append((f"listing2_ring_segmented_whole_n{n}", t_whole,
+                 "8MiB allreduce, whole-buffer ring ((p-1)S bytes/rank)"))
+    ROWS.append((f"listing2_ring_segmented_chunked_n{n}", t_seg,
+                 "8MiB allreduce, segmented reduce-scatter+allgather "
+                 "(2S(p-1)/p bytes/rank, 256KiB segments)"))
+    speedup = t_whole / t_seg
+    verdict = (f"{speedup:.2f}x segmented vs whole-buffer ring "
+               f"(acceptance: >={SEGMENTED_ACCEPTANCE}x)")
+    if speedup < SEGMENTED_ACCEPTANCE:
+        verdict = (f"FAILED: segmented speedup {speedup:.2f}x < "
+                   f"{SEGMENTED_ACCEPTANCE}x")
+    ROWS.append((f"listing2_ring_segmented_speedup_n{n}", 0.0, verdict))
+
+
 def bench_listing4_2d_matvec():
     from repro.core import parallelize_func
     n = 3
@@ -346,15 +410,19 @@ def bench_figure1_api_parity():
     signature on both communicator implementations."""
     from repro.core import LocalComm, PeerComm, parallelize_func
     methods = ["send", "receive", "receive_async", "get_rank", "get_size",
-               "split", "broadcast", "allreduce",
-               "reduce", "gather", "scan",    # paper section-6 extensions
+               "split", "broadcast", "allreduce", "allgather",
+               "reduce", "gather", "scatter",  # paper section-6 extensions
+               "scan", "alltoall", "reducescatter",
                "isend", "irecv", "ibarrier", "ibcast",  # MPI-3 nonblocking
-               "iallreduce", "iallgather"]
+               "iallreduce", "iallgather", "ireduce", "igather",
+               "iscatter", "iscan", "ialltoall", "ireducescatter"]
     missing = [m for m in methods if not hasattr(LocalComm, m)]
     peer = ["p2p", "shift", "rank", "size", "split", "broadcast",
             "allreduce", "allgather", "reducescatter", "alltoall",
-            "reduce", "gather", "scan",
-            "ibarrier", "ibcast", "iallreduce", "iallgather"]
+            "reduce", "gather", "scatter", "scan",
+            "ibarrier", "ibcast", "iallreduce", "iallgather",
+            "ireduce", "igather", "iscatter", "iscan", "ialltoall",
+            "ireducescatter"]
     missing += [m for m in peer if not hasattr(PeerComm, m)]
     assert not missing, missing
     ROWS.append(("figure1_api_parity", 0.0,
@@ -527,6 +595,8 @@ REQUIRED_ROW_PREFIXES = (
     "listing2_ring_boot_spawn", "listing2_ring_spawn_warm",
     "listing2_ring_overlap_blocking", "listing2_ring_overlap_iallreduce",
     "listing2_ring_overlap_speedup",
+    "listing2_ring_segmented_whole", "listing2_ring_segmented_chunked",
+    "listing2_ring_segmented_speedup",
     "listing4_2d_matvec_local", "listing4_2d_matvec_cluster",
     "figure1_api_parity", "wire_codec_roundtrip",
 )
@@ -558,6 +628,7 @@ def main() -> None:
     bench_listing1_matvec()
     bench_listing2_ring()
     bench_listing2_ring_overlap(args.quick)
+    bench_listing2_ring_segmented(args.quick)
     bench_listing4_2d_matvec()
     bench_spawn_launcher(args.quick)
     bench_figure1_api_parity()

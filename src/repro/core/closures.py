@@ -54,10 +54,14 @@ class ParallelClosure:
     """RDD-of-a-function (paper section 3.2)."""
 
     def __init__(self, fn: Callable, backend: str = "native",
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, segment_bytes: int | None = None):
         self._fn = fn
         self._backend = backend
         self._timeout = timeout
+        # segmented-ring tuning for the message runtimes (local/cluster);
+        # None defers to $MPIGNITE_SEGMENT_BYTES. SPMD mode ignores it:
+        # PeerComm's ring collectives are already chunked at trace time.
+        self._segment_bytes = segment_bytes
 
     def execute(self, n: int | None = None, *, mode: str = "local",
                 mesh: Mesh | None = None, jit: bool = True) -> list:
@@ -65,7 +69,9 @@ class ParallelClosure:
             if n is None:
                 raise ValueError("local mode requires an instance count")
             return ParallelFuncRDD(self._fn, timeout=self._timeout,
-                                   backend=self._backend).execute(n)
+                                   backend=self._backend,
+                                   segment_bytes=self._segment_bytes
+                                   ).execute(n)
         if mode == "cluster":
             from .cluster import get_pool
             if n is None:
@@ -76,7 +82,8 @@ class ParallelClosure:
             # connect + address brokering.
             pool = get_pool(n, backend=self._backend)
             return pool.run(self._fn, backend=self._backend,
-                            timeout=self._timeout)
+                            timeout=self._timeout,
+                            segment_bytes=self._segment_bytes)
         if mode != "spmd":
             raise ValueError(f"unknown mode {mode!r}")
         mesh = mesh if mesh is not None else flat_mesh(n)
@@ -101,11 +108,15 @@ class ParallelClosure:
 
 
 def parallelize_func(fn: Callable, *, backend: str = "native",
-                     timeout: float = 60.0) -> ParallelClosure:
+                     timeout: float = 60.0,
+                     segment_bytes: int | None = None) -> ParallelClosure:
     """``sc.parallelizeFunc`` analogue. The closure takes the communicator
     as its only argument; other inputs arrive via python closure capture,
-    exactly as in the paper's listings."""
-    return ParallelClosure(fn, backend=backend, timeout=timeout)
+    exactly as in the paper's listings. ``segment_bytes`` tunes the
+    segmented ring schedules per closure (None = $MPIGNITE_SEGMENT_BYTES,
+    <= 0 disables the automatic segmented upgrade)."""
+    return ParallelClosure(fn, backend=backend, timeout=timeout,
+                           segment_bytes=segment_bytes)
 
 
 class MPIgniteContext:

@@ -51,6 +51,7 @@ import threading
 import time
 from typing import Any, Callable
 
+from ..matching import env_segment_bytes
 from . import wire
 from .launcher import ExecutorSpec, ForkLauncher, Launcher
 from .serializer import dumps_closure
@@ -446,12 +447,20 @@ class ExecutorPool:
         raise ExecutorFailure(dead, reason)
 
     def run(self, fn: Callable, backend: str | None = None,
-            timeout: float | None = None) -> list:
+            timeout: float | None = None,
+            segment_bytes: int | None = None) -> list:
         """Dispatch ``fn`` to every executor as one job; return the list
         of per-rank results (the paper: 'an array of return values from
-        each process'). Raises ``ExecutorFailure`` on rank death,
-        ``RuntimeError`` with the remote traceback on a closure error,
-        ``TimeoutError`` on a deadlocked closure."""
+        each process'). ``segment_bytes`` travels with the job (like
+        ``backend``) and tunes the segmented ring schedules inside the
+        executors; None resolves to the *driver's*
+        $MPIGNITE_SEGMENT_BYTES at dispatch, so every rank of a job
+        always computes segmentation from one shared value -- executors
+        on hosts with divergent env cannot build incompatible schedules
+        (a closure can still retune via ``comm.with_segment_bytes``).
+        Raises ``ExecutorFailure`` on rank death, ``RuntimeError`` with
+        the remote traceback on a closure error, ``TimeoutError`` on a
+        deadlocked closure."""
         with self._job_lock:
             if self.closed:
                 raise RuntimeError("pool is shut down")
@@ -483,8 +492,10 @@ class ExecutorPool:
                 self._done_event = threading.Event()
                 self._error_event = threading.Event()
                 done_event, error_event = self._done_event, self._error_event
+            job_seg = (env_segment_bytes() if segment_bytes is None
+                       else int(segment_bytes))
             header = {"kind": "job", "job": job_id, "backend": job_backend,
-                      "timeout": job_timeout}
+                      "timeout": job_timeout, "segment_bytes": job_seg}
             now = time.time()
             for r in range(self.n):
                 self._last_seen[r] = now    # fresh grace period per job

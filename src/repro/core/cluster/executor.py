@@ -179,7 +179,8 @@ class ExecutorChannel:
                         wire.decode(payload))
                 elif kind == "job":
                     self.jobs.put((header["job"], header["backend"],
-                                   header["timeout"], payload))
+                                   header["timeout"],
+                                   header.get("segment_bytes"), payload))
                 elif kind == "peers":
                     self.peer_addrs = {int(r): (h, p) for r, (h, p)
                                        in header["addrs"].items()}
@@ -362,8 +363,9 @@ class ClusterComm(MessageComm):
     def __init__(self, channel: ExecutorChannel, group: tuple[int, ...],
                  rank_in_group: int, ctx: int, epoch: tuple = (),
                  backend: str = "linear", timeout: float = 60.0,
-                 job: int = 0):
-        super().__init__(group, rank_in_group, ctx, epoch, backend)
+                 job: int = 0, segment_bytes: int | None = None):
+        super().__init__(group, rank_in_group, ctx, epoch, backend,
+                         segment_bytes=segment_bytes)
         self._chan = channel
         self._timeout = timeout
         self._job = job     # selects the job's mailbox; survives split()
@@ -381,7 +383,8 @@ class ClusterComm(MessageComm):
     def _clone(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
                epoch: tuple) -> "ClusterComm":
         return ClusterComm(self._chan, group, rank_in_group, ctx, epoch,
-                           self._backend, self._timeout, self._job)
+                           self._backend, self._timeout, self._job,
+                           segment_bytes=self._segment_bytes)
 
     def _async_mailbox(self):
         return self._chan.mailbox_for(self._job), self._timeout
@@ -466,7 +469,7 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
         job = chan.jobs.get()
         if job is None or chan.exit_requested.is_set():
             break
-        job_id, job_backend, job_timeout, blob = job
+        job_id, job_backend, job_timeout, job_seg, blob = job
         chan.purge_mailboxes_before(job_id)
         try:
             fn = loads_closure(blob)
@@ -480,7 +483,8 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
         comm = ClusterComm(chan, tuple(range(size)), rank,
                            ctx=job_id, epoch=("j", job_id),
                            backend=job_backend or backend,
-                           timeout=job_timeout or timeout, job=job_id)
+                           timeout=job_timeout or timeout, job=job_id,
+                           segment_bytes=job_seg)
         try:
             result = fn(comm)
             chan.drain_job(job_id)      # leaked requests die with the job

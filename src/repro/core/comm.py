@@ -141,6 +141,17 @@ class PeerComm:
     def with_backend(self, backend: str) -> "PeerComm":
         return dataclasses.replace(self, backend=backend)
 
+    @property
+    def _algo(self) -> str:
+        """Collective algorithm after alias resolution: the message
+        runtimes' ``segmented`` backend maps to ``ring`` here -- the SPMD
+        ring collectives are already chunked (reduce-scatter/all-gather)
+        at trace time, so segmentation is a no-op refinement and one
+        closure text stays valid across all three modes."""
+        if self.backend in ("segmented", "segmented-ring"):
+            return "ring"
+        return self.backend
+
     # -- traced introspection -------------------------------------------------
     def axis_index(self):
         return lax.axis_index(self.axis)
@@ -212,13 +223,13 @@ class PeerComm:
         if self.size == 1:
             return x
         native, combine = _resolve_op(op)
-        if self.backend == "native" and native is not None \
+        if self._algo == "native" and native is not None \
                 and self._native_groups_ok():
             _log("allreduce", "native",
                  2 * x.nbytes * (self.size - 1) // self.size,
                  2 * (self.size - 1))
             return native(x, self.axis, axis_index_groups=self._axis_groups())
-        if self.backend in ("native", "ring"):
+        if self._algo in ("native", "ring"):
             return self._ring_allreduce(x, combine)
         return self._linear_allreduce(x, combine)
 
@@ -226,7 +237,7 @@ class PeerComm:
         x = jnp.asarray(x)
         if self.size == 1:
             return x
-        if self.backend == "native" and self._native_groups_ok():
+        if self._algo == "native" and self._native_groups_ok():
             work = x.astype(jnp.int32) if x.dtype == jnp.bool_ else x
             sel = jnp.where(self.rank() == root, work, jnp.zeros_like(work))
             _log("broadcast", "native", x.nbytes, 1)
@@ -243,13 +254,13 @@ class PeerComm:
         x = jnp.asarray(x)
         if self.size == 1:
             return x if tiled else jnp.expand_dims(x, axis)
-        if self.backend == "native" and self._native_groups_ok():
+        if self._algo == "native" and self._native_groups_ok():
             _log("allgather", "native", x.nbytes * (self.size - 1),
                  self.size - 1)
             return lax.all_gather(x, self.axis, axis=axis, tiled=tiled,
                                   axis_index_groups=self._axis_groups())
         stacked = self._ring_allgather(x)          # (P, ...)
-        if self.backend == "linear":
+        if self._algo == "linear":
             # master relay-out: the root re-broadcasts the full P*S buffer
             # ((P-1) steps of P*S bytes -- the phase-1 cost structure).
             stacked = self._relay_from(stacked, root=0)
@@ -265,14 +276,14 @@ class PeerComm:
         if self.size == 1:
             return x
         _, combine = _resolve_op(op)
-        if self.backend == "native" and op == "add" \
+        if self._algo == "native" and op == "add" \
                 and self._native_groups_ok():
             _log("reducescatter", "native",
                  x.nbytes * (self.size - 1) // self.size, self.size - 1)
             return lax.psum_scatter(x, self.axis, scatter_dimension=axis,
                                     tiled=True,
                                     axis_index_groups=self._axis_groups())
-        if self.backend in ("native", "ring"):
+        if self._algo in ("native", "ring"):
             return self._ring_reducescatter(x, combine, axis)
         # linear: the master computes the full reduction, then scatters.
         full = self._linear_allreduce(x, combine)
@@ -286,7 +297,7 @@ class PeerComm:
         x = jnp.asarray(x)
         if self.size == 1:
             return x
-        if self.backend == "native" and self._native_groups_ok():
+        if self._algo == "native" and self._native_groups_ok():
             _log("alltoall", "native",
                  x.nbytes * (self.size - 1) // self.size, self.size - 1)
             return lax.all_to_all(x, self.axis, split_axis, concat_axis,
@@ -325,6 +336,21 @@ class PeerComm:
             shift *= 2
         return acc
 
+    def scatter(self, x, root: int = 0, *, axis: int = 0):
+        """MPI_Scatter in SPMD form: dim ``axis`` (size P*c) of the
+        root's buffer is split into P slices and rank i keeps slice i
+        (every rank passes a congruent buffer -- rendezvous; only the
+        root's content matters, mirroring 'significant only at root')."""
+        x = jnp.asarray(x)
+        if self.size == 1:
+            return x
+        if x.shape[axis] % self.size:
+            raise ValueError(f"scatter dim {axis} size {x.shape[axis]} not "
+                             f"divisible by group size {self.size}")
+        full = self.broadcast(x, root)
+        c = x.shape[axis] // self.size
+        return lax.dynamic_slice_in_dim(full, self.rank() * c, c, axis=axis)
+
     # -- nonblocking wrappers (MPI-3 shape) ---------------------------------
     # In SPMD the runtime cannot defer a collective at the Python level --
     # XLA's latency-hiding scheduler IS the progress engine, free to
@@ -353,6 +379,36 @@ class PeerComm:
     def ibarrier(self) -> Request:
         with _overlap_scope():
             return Request.completed(self.barrier(), op="ibarrier")
+
+    def ireduce(self, x, root: int = 0, op="add") -> Request:
+        with _overlap_scope():
+            return Request.completed(self.reduce(x, root, op), op="ireduce")
+
+    def igather(self, x, root: int = 0, *, axis: int = 0) -> Request:
+        with _overlap_scope():
+            return Request.completed(self.gather(x, root, axis=axis),
+                                     op="igather")
+
+    def iscatter(self, x, root: int = 0, *, axis: int = 0) -> Request:
+        with _overlap_scope():
+            return Request.completed(self.scatter(x, root, axis=axis),
+                                     op="iscatter")
+
+    def iscan(self, x, op="add") -> Request:
+        with _overlap_scope():
+            return Request.completed(self.scan(x, op), op="iscan")
+
+    def ialltoall(self, x, *, split_axis: int = 0,
+                  concat_axis: int = 0) -> Request:
+        with _overlap_scope():
+            return Request.completed(
+                self.alltoall(x, split_axis=split_axis,
+                              concat_axis=concat_axis), op="ialltoall")
+
+    def ireducescatter(self, x, op="add", *, axis: int = 0) -> Request:
+        with _overlap_scope():
+            return Request.completed(self.reducescatter(x, op, axis=axis),
+                                     op="ireducescatter")
 
     # -- pytree conveniences ----------------------------------------------------
     def tree_allreduce(self, tree, op="add"):
@@ -471,7 +527,7 @@ class PeerComm:
         res = jnp.zeros_like(xs)                 # res[j] = piece from comm rank j
         own = lax.dynamic_slice_in_dim(xs, rank, 1, axis=0)
         res = lax.dynamic_update_slice_in_dim(res, own, rank, axis=0)
-        if self.backend == "linear":
+        if self._algo == "linear":
             v = xs
             for s in range(1, p):
                 v = self._ppermute(v, G.ring_perm(self._groups(), 1),

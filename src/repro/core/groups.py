@@ -167,6 +167,9 @@ def collective_cost(op: str, backend: str, nbytes: int, p: int) -> CollectiveCos
     root-broadcast, O(p * S) wire bytes, 2(p-1) serial full-size steps.
     ring   -- phase-2 peer-to-peer: chunked reduce-scatter + all-gather,
     O(2S) bytes in 2(p-1) chunk-size steps.
+    segmented -- the message-runtime segmented ring (reduce-scatter +
+    all-gather over MPIGNITE_SEGMENT_BYTES pieces): same bandwidth-optimal
+    byte count as ``ring``, pipelined into segment-size steps.
     native -- XLA collectives; modeled with the ring byte count (XLA lowers
     to ring/tree variants with the same asymptotics) but fusable/overlappable.
     """
@@ -182,10 +185,12 @@ def collective_cost(op: str, backend: str, nbytes: int, p: int) -> CollectiveCos
             "alltoall": ((p - 1) * S, p - 1),              # relay full buffer
             "p2p": (S, 1),
         }
-    elif backend in ("ring", "native"):
+    elif backend in ("ring", "native", "segmented"):
         table = {
             "allreduce": (2 * S * (p - 1) // p, 2 * (p - 1)),
-            "broadcast": ((p - 1) * S if backend == "ring" else S, p - 1),
+            # segmented maps to the ring relay in SPMD (comm._algo), so
+            # its broadcast moves ring's bytes, not native's fused S
+            "broadcast": ((p - 1) * S if backend != "native" else S, p - 1),
             "allgather": (S * (p - 1) // p, p - 1),
             "reducescatter": (S * (p - 1) // p, p - 1),
             "alltoall": (S * (p - 1) // p, p - 1),
@@ -199,6 +204,38 @@ def collective_cost(op: str, backend: str, nbytes: int, p: int) -> CollectiveCos
 
 def pad_to_multiple(n: int, p: int) -> int:
     return (n + p - 1) // p * p
+
+
+# ---------------------------------------------------------------------------
+# Segmented-ring chunk/segment math. Pure ints so every rank computes the
+# identical partition from (payload size, world size, segment size) alone --
+# no negotiation messages -- and so the invariants are hypothesis-testable.
+# ---------------------------------------------------------------------------
+
+def chunk_bounds(n: int, p: int) -> list[int]:
+    """``p + 1`` boundaries splitting ``range(n)`` into ``p`` contiguous
+    near-equal chunks (the first ``n % p`` chunks get one extra element,
+    so no payload size needs padding). Chunk ``i`` is
+    ``[bounds[i], bounds[i+1])``; chunks may be empty when ``n < p``."""
+    if p < 1:
+        raise ValueError(f"need at least one chunk, got p={p}")
+    base, rem = divmod(n, p)
+    bounds = [0]
+    for i in range(p):
+        bounds.append(bounds[-1] + base + (1 if i < rem else 0))
+    return bounds
+
+
+def segment_spans(length: int, seg: int) -> list[tuple[int, int]]:
+    """``(start, stop)`` spans of at most ``seg`` elements covering
+    ``range(length)`` in order -- the per-hop message schedule of a
+    segmented transfer. Empty for ``length <= 0`` (an empty chunk moves
+    zero messages, on both ends, by construction)."""
+    if seg < 1:
+        raise ValueError(f"segment size must be >= 1, got {seg}")
+    if length <= 0:
+        return []
+    return [(a, min(a + seg, length)) for a in range(0, length, seg)]
 
 
 ReduceFn = Callable  # (a, b) -> elementwise combine; must be associative

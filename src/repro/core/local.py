@@ -54,8 +54,10 @@ class LocalComm(MessageComm):
 
     def __init__(self, world: _World, group: tuple[int, ...],
                  rank_in_group: int, ctx: int, epoch: tuple = (),
-                 backend: str = "linear"):
-        super().__init__(group, rank_in_group, ctx, epoch, backend)
+                 backend: str = "linear",
+                 segment_bytes: int | None = None):
+        super().__init__(group, rank_in_group, ctx, epoch, backend,
+                         segment_bytes=segment_bytes)
         self._world = world
 
     # -- transport ----------------------------------------------------------
@@ -71,7 +73,7 @@ class LocalComm(MessageComm):
     def _clone(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
                epoch: tuple) -> "LocalComm":
         return LocalComm(self._world, group, rank_in_group, ctx, epoch,
-                         self._backend)
+                         self._backend, segment_bytes=self._segment_bytes)
 
     def _async_mailbox(self):
         me = self._group[self._rank]
@@ -89,10 +91,11 @@ class ParallelFuncRDD:
     of return values from each process')."""
 
     def __init__(self, fn: Callable[[LocalComm], Any], timeout: float = 60.0,
-                 backend: str = "linear"):
+                 backend: str = "linear", segment_bytes: int | None = None):
         self._fn = fn
         self._timeout = timeout
         self._backend = backend
+        self._segment_bytes = segment_bytes
 
     def execute(self, n: int) -> list:
         world = _World(n, timeout=self._timeout)
@@ -101,7 +104,8 @@ class ParallelFuncRDD:
 
         def run(rank: int):
             comm = LocalComm(world, tuple(range(n)), rank, ctx=0,
-                             backend=self._backend)
+                             backend=self._backend,
+                             segment_bytes=self._segment_bytes)
             try:
                 results[rank] = self._fn(comm)
             except BaseException as e:  # noqa: BLE001

@@ -36,6 +36,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Generator, Sequence
 
+import numpy as np
+
 from . import groups as G
 
 
@@ -46,20 +48,66 @@ class PeerDeadError(ConnectionError):
 
 #: algorithms available to message-composed collectives. ``linear`` is the
 #: paper's phase-1 (every byte relays through a root/master); ``ring`` is
-#: the phase-2 peer-to-peer mode. ``native`` is accepted as an alias of
-#: ``linear`` so closures written for the SPMD backend run unchanged --
-#: linear is the runtime default because its root-ordered fold keeps
-#: ``allreduce`` deterministic for arbitrary (non-commutative) functions,
-#: the property the thread oracle documents.
-MESSAGE_BACKENDS = ("linear", "ring")
+#: the phase-2 peer-to-peer mode (large arrays stream through segmented
+#: reduce-scatter/all-gather schedules automatically -- see
+#: ``MPIGNITE_SEGMENT_BYTES``); ``segmented`` forces the segmented ring
+#: schedules regardless of payload size (tests, benchmarks). ``native`` is
+#: accepted as an alias of ``linear`` so closures written for the SPMD
+#: backend run unchanged -- linear is the runtime default because its
+#: root-ordered fold keeps ``allreduce`` deterministic for arbitrary
+#: (non-commutative) functions, the property the thread oracle documents.
+MESSAGE_BACKENDS = ("linear", "ring", "segmented")
+
+_BACKEND_ALIASES = {"native": "linear", "segmented-ring": "segmented"}
+
+#: env knob for the segmented ring schedules: arrays at least this many
+#: bytes stream through the ring in segments of this size (<= 0 disables
+#: the automatic upgrade; the explicit ``segmented`` backend then uses the
+#: default size). Read at call time so executors honor per-job changes.
+SEGMENT_ENV = "MPIGNITE_SEGMENT_BYTES"
+DEFAULT_SEGMENT_BYTES = 256 * 1024
 
 
 def normalize_backend(backend: str) -> str:
-    backend = "linear" if backend == "native" else backend
+    backend = _BACKEND_ALIASES.get(backend, backend)
     if backend not in MESSAGE_BACKENDS:
         raise ValueError(f"unknown message backend {backend!r}; "
-                         f"expected one of {MESSAGE_BACKENDS} or 'native'")
+                         f"expected one of {MESSAGE_BACKENDS} or an alias "
+                         f"in {tuple(_BACKEND_ALIASES)}")
     return backend
+
+
+_warned_segment_env: set[str] = set()
+
+
+def env_segment_bytes() -> int:
+    """The process-wide segment-size default (``$MPIGNITE_SEGMENT_BYTES``),
+    read at call time: per collective in the in-process runtime, and
+    once per job *at the driver* in cluster mode (the resolved value
+    ships in the job frame so all ranks agree -- see ``ExecutorPool.run``).
+    A malformed value (e.g. ``1M`` -- only plain byte counts are
+    accepted) warns once and falls back to the default, so a mis-set
+    tuning knob is visible instead of silently ignored."""
+    raw = os.environ.get(SEGMENT_ENV)
+    if raw is None:
+        return DEFAULT_SEGMENT_BYTES
+    try:
+        return int(raw)
+    except ValueError:
+        if raw not in _warned_segment_env:
+            _warned_segment_env.add(raw)
+            import warnings
+            warnings.warn(
+                f"${SEGMENT_ENV}={raw!r} is not an integer byte count; "
+                f"using the default ({DEFAULT_SEGMENT_BYTES})",
+                RuntimeWarning, stacklevel=2)
+        return DEFAULT_SEGMENT_BYTES
+
+
+def _cat(parts: list) -> Any:
+    """Reassemble received 1-D segments (skip the copy when a transfer
+    arrived as a single segment)."""
+    return np.concatenate(parts) if len(parts) > 1 else parts[0]
 
 
 @functools.lru_cache(maxsize=1024)
@@ -577,7 +625,8 @@ class MessageComm:
     paper's spelling alongside pythonic aliases."""
 
     def __init__(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
-                 epoch: tuple = (), backend: str = "linear"):
+                 epoch: tuple = (), backend: str = "linear",
+                 segment_bytes: int | None = None):
         self._group = group           # world ranks, ordered by comm rank
         self._rank = rank_in_group
         self._ctx = ctx
@@ -586,6 +635,9 @@ class MessageComm:
         self._calls = _CallCounter()
         self._epoch = epoch
         self._backend = normalize_backend(backend)
+        # explicit per-communicator segment size; None defers to the env
+        # knob at call time (per-job override beats env beats default)
+        self._segment_bytes = segment_bytes
 
     # -- transport hooks (subclass responsibility) --------------------------
     def _put(self, world_dst: int, ctx: int, tag: int, src_world: int,
@@ -597,6 +649,9 @@ class MessageComm:
 
     def _clone(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
                epoch: tuple) -> "MessageComm":
+        """Construct a same-transport communicator (``split`` /
+        ``with_backend``). Implementations must carry over this
+        communicator's ``backend`` and ``segment_bytes``."""
         raise NotImplementedError
 
     def _async_mailbox(self) -> tuple["Mailbox", float] | None:
@@ -631,6 +686,70 @@ class MessageComm:
         clone._calls = self._calls          # shared object, not a copy
         clone._backend = normalize_backend(backend)
         return clone
+
+    def with_segment_bytes(self, segment_bytes: int | None) -> "MessageComm":
+        """Same transport, group, and backend, different segmented-ring
+        tuning (None = this process's env default). The deterministic
+        way for a closure to retune mid-job -- unlike mutating the env,
+        the clone's value is explicit on every rank that runs the same
+        closure, so schedules stay compatible across hosts."""
+        clone = self._clone(self._group, self._rank, self._ctx, self._epoch)
+        clone._calls = self._calls          # shared object, not a copy
+        clone._segment_bytes = segment_bytes
+        return clone
+
+    # -- segmented-ring policy ----------------------------------------------
+    def _segment_limit(self) -> int:
+        """Effective segment size in bytes (explicit override wins, else
+        the env knob). <= 0 means 'never auto-upgrade'."""
+        if self._segment_bytes is not None:
+            return self._segment_bytes
+        return env_segment_bytes()
+
+    def _segment_elems(self, dtype: np.dtype) -> int:
+        limit = self._segment_limit()
+        if limit <= 0:              # forced-segmented with auto disabled
+            limit = DEFAULT_SEGMENT_BYTES
+        return max(1, limit // max(1, dtype.itemsize))
+
+    def _use_segments(self, data: Any, fold: Callable | None = None,
+                      forced_only: bool = False) -> bool:
+        """Whether this payload takes a segmented ring schedule.
+
+        The explicit ``segmented`` backend always segments eligible
+        arrays -- the user opted into the segmented contract (congruent
+        payloads across ranks; elementwise folds). Plain ``ring``
+        auto-upgrades only when that contract is *provable*, because
+        upgrading must never change the semantics of a call the
+        whole-buffer ring handled:
+
+        - a reduction auto-upgrades only for ``np.ufunc`` folds
+          (elementwise by construction -- applying them per segment and
+          concatenating is exact). Arbitrary callables (top-k merges,
+          sorted merges, lambdas) keep the whole-buffer ring.
+        - ``forced_only`` ops (allgather: per-rank payloads need not be
+          congruent in the message runtime) never auto-upgrade.
+        - broadcast auto-upgrades for any array: the root's meta message
+          carries the segmentation decision, so no cross-rank contract
+          is assumed.
+
+        Non-array pytrees, object arrays, and (under ``ring``) arrays
+        below the segment threshold always fall back. The decision and
+        the chunk/segment boundaries are pure functions of (backend,
+        segment size, payload shape), so congruent payloads yield the
+        same answer on every rank -- no negotiation."""
+        if len(self._group) == 1 or self._backend == "linear":
+            return False
+        if not isinstance(data, np.ndarray) or data.dtype.hasobject:
+            return False
+        if self._backend == "segmented":
+            return True
+        if forced_only:
+            return False
+        if fold is not None and not isinstance(fold, np.ufunc):
+            return False
+        limit = self._segment_limit()
+        return 0 < limit <= data.nbytes
 
     # -- point to point -----------------------------------------------------
     def send(self, dst: int, tag: int, data: Any) -> None:
@@ -697,6 +816,25 @@ class MessageComm:
         ``(ctx, tag, src_world)`` match key of the awaited message."""
         return (stable_ctx(self._ctx, tag, key), tag, self._group[src])
 
+    def _send_segments(self, dst: int, tag: int, key: tuple, phase: Any,
+                       flat: np.ndarray, spans: list) -> None:
+        """Send ``flat``'s segments to ``dst`` under per-segment subkeys
+        ``(*key, phase, s)`` -- one half of the segmented wire protocol
+        (``_recv_segments`` is the other; both ends derive identical
+        ``spans`` from pure math, so the subkeys line up)."""
+        for s, (a, b) in enumerate(spans):
+            self._send_coll(dst, tag, (*key, phase, s), flat[a:b])
+
+    def _recv_segments(self, src: int, tag: int, key: tuple, phase: Any,
+                       nseg: int):
+        """Yield the ``nseg`` receive descriptors matching a
+        ``_send_segments`` call; returns the received pieces in order
+        (drive with ``yield from``)."""
+        parts = []
+        for s in range(nseg):
+            parts.append((yield self._recv_op(src, tag, (*key, phase, s))))
+        return parts
+
     def _run_sched(self, gen) -> Any:
         """Drive a schedule generator to completion with blocking
         receives on the caller's thread -- the blocking collectives."""
@@ -720,16 +858,51 @@ class MessageComm:
 
     def _broadcast_sched(self, root: int, data: Any, tag: int, key: tuple):
         p = len(self._group)
-        if self._backend == "ring":
-            # pass-along ring from root: root -> root+1 -> ... (P-1 hops)
-            if self._rank == root:
-                if p > 1:
-                    self._send_coll((root + 1) % p, tag, key, data)
+        if self._backend in ("ring", "segmented"):
+            # pass-along ring from root: root -> root+1 -> ... (P-1 hops).
+            # A meta message leads each hop so non-roots -- who hold no
+            # data and therefore cannot evaluate segmentation eligibility
+            # themselves -- learn whether (and in how many segments) the
+            # payload streams; a non-segmented payload rides *inside* the
+            # meta, keeping the small-payload path at one message per hop.
+            # Segmented payloads pipeline: each rank forwards segment s
+            # before receiving s+1, so the ring drains in
+            # ~O(n + p*segment) instead of O(p*n).
+            if p == 1:
                 return data
-            data = yield self._recv_op((self._rank - 1) % p, tag, key)
-            if (self._rank + 1) % p != root:
-                self._send_coll((self._rank + 1) % p, tag, key, data)
-            return data
+            prev, succ = (self._rank - 1) % p, (self._rank + 1) % p
+            forward = succ != root      # last ring rank closes the loop
+            if self._rank == root:
+                if self._use_segments(data):
+                    flat = data.reshape(-1)
+                    spans = G.segment_spans(
+                        flat.size, self._segment_elems(data.dtype))
+                    self._send_coll(succ, tag, (*key, "m"),
+                                    ("seg", len(spans), data.shape,
+                                     data.dtype.str))
+                    self._send_segments(succ, tag, key, "b", flat, spans)
+                else:
+                    self._send_coll(succ, tag, (*key, "m"),
+                                    ("whole", data))
+                return data
+            meta = yield self._recv_op(prev, tag, (*key, "m"))
+            if forward:
+                self._send_coll(succ, tag, (*key, "m"), meta)
+            if meta[0] != "seg":
+                return meta[1]
+            _, nseg, shape, dtype_str = meta
+            # interleaved receive-and-forward (the pipelining), so this
+            # loop matches _send_segments' subkeys by hand instead of
+            # driving _recv_segments
+            parts = []
+            for s in range(nseg):
+                piece = yield self._recv_op(prev, tag, (*key, "b", s))
+                if forward:
+                    self._send_coll(succ, tag, (*key, "b", s), piece)
+                parts.append(piece)
+            flat = (_cat(parts) if parts
+                    else np.empty(0, dtype=np.dtype(dtype_str)))
+            return flat.reshape(shape)
         if self._rank == root:
             for r in range(p):
                 if r != root:
@@ -741,7 +914,10 @@ class MessageComm:
         p = len(self._group)
         if p == 1:
             return data
-        if self._backend == "ring":
+        if self._backend in ("ring", "segmented"):
+            if self._use_segments(data, fold=f):
+                return (yield from self._allreduce_segmented_sched(
+                    data, f, tag, key))
             acc, v = data, data
             right = (self._rank + 1) % p
             left = (self._rank - 1) % p
@@ -760,15 +936,88 @@ class MessageComm:
         self._send_coll(0, tag, key, data)
         return (yield self._recv_op(0, tag, key))
 
+    def _allreduce_segmented_sched(self, data: np.ndarray, f: Callable,
+                                   tag: int, key: tuple):
+        """Bandwidth-optimal segmented ring allreduce: a reduce-scatter
+        phase (each rank ends owning the full fold of one chunk) followed
+        by an all-gather phase (the reduced chunks circulate back), both
+        streaming each chunk as segments of at most
+        ``MPIGNITE_SEGMENT_BYTES``. ~2S(p-1)/p bytes per rank instead of
+        the whole-buffer ring's (p-1)S.
+
+        ``f`` must be elementwise (applied per segment and concatenated)
+        as well as associative/commutative -- the numpy-ufunc shape every
+        ring reduction already assumes. Buffers are never mutated: folds
+        rebind chunk slots, so a segment view sent earlier (delivered by
+        reference in local mode) stays valid however late its receiver
+        consumes it."""
+        p = len(self._group)
+        flat = data.reshape(-1)
+        bounds = G.chunk_bounds(flat.size, p)
+        seg = self._segment_elems(data.dtype)
+        right, left = (self._rank + 1) % p, (self._rank - 1) % p
+        chunks: list[np.ndarray] = [flat[bounds[i]:bounds[i + 1]]
+                                    for i in range(p)]
+
+        def spans_of(idx: int) -> list[tuple[int, int]]:
+            return G.segment_spans(bounds[idx + 1] - bounds[idx], seg)
+
+        # reduce-scatter: after step s, the fold of chunk c has advanced
+        # one hop; after p-1 steps rank r owns the full fold of chunk
+        # (r+1) % p. Sends complete inline (always-nonblocking), so each
+        # step's segments pipeline through the ring.
+        for step in range(p - 1):
+            send_idx = (self._rank - step) % p
+            recv_idx = (self._rank - step - 1) % p
+            self._send_segments(right, tag, key, ("rs", step),
+                                chunks[send_idx], spans_of(send_idx))
+            spans = spans_of(recv_idx)
+            if spans:
+                cur = chunks[recv_idx]
+                pieces = yield from self._recv_segments(
+                    left, tag, key, ("rs", step), len(spans))
+                chunks[recv_idx] = _cat(
+                    [f(cur[a:b], piece)
+                     for (a, b), piece in zip(spans, pieces)])
+        # all-gather: circulate the reduced chunks; receive chunk c this
+        # step, forward it the next.
+        for step in range(p - 1):
+            send_idx = (self._rank - step + 1) % p
+            recv_idx = (self._rank - step) % p
+            self._send_segments(right, tag, key, ("ag", step),
+                                chunks[send_idx], spans_of(send_idx))
+            spans = spans_of(recv_idx)
+            if spans:
+                chunks[recv_idx] = _cat((yield from self._recv_segments(
+                    left, tag, key, ("ag", step), len(spans))))
+        out = np.concatenate([np.asarray(c).reshape(-1) for c in chunks])
+        return out.reshape(data.shape)
+
     def _allgather_sched(self, data: Any, tag: int, key: tuple):
         p = len(self._group)
         if p == 1:
             return [data]
         out = [None] * p
         out[self._rank] = data
-        if self._backend == "ring":
+        if self._backend in ("ring", "segmented"):
             right = (self._rank + 1) % p
             left = (self._rank - 1) % p
+            if self._use_segments(data, forced_only=True):
+                # under the forced segmented backend every rank opted
+                # into congruent payloads, so each derives identical
+                # spans from its own block -- no negotiation needed
+                flat = data.reshape(-1)
+                spans = G.segment_spans(flat.size,
+                                        self._segment_elems(data.dtype))
+                for step in range(p - 1):
+                    self._send_segments(right, tag, key, step, flat, spans)
+                    if spans:
+                        parts = yield from self._recv_segments(
+                            left, tag, key, step, len(spans))
+                        flat = _cat(parts)
+                    out[(self._rank - step - 1) % p] = \
+                        flat.reshape(data.shape)
+                return out
             v = data
             for step in range(p - 1):
                 self._send_coll(right, tag, key, v)
@@ -783,6 +1032,85 @@ class MessageComm:
             return out
         self._send_coll(0, tag, key, data)
         return (yield self._recv_op(0, tag, key))
+
+    def _reduce_sched(self, root: int, data: Any, f: Callable, tag: int,
+                      key: tuple):
+        """Fold everyone's data at ``root`` (None elsewhere), rank-ordered
+        at the root so non-commutative ``f`` stays deterministic."""
+        p = len(self._group)
+        if self._rank == root:
+            acc = data
+            for r in range(p):
+                if r != root:
+                    acc = f(acc, (yield self._recv_op(r, tag, key)))
+            return acc
+        self._send_coll(root, tag, key, data)
+        return None
+
+    def _gather_sched(self, root: int, data: Any, tag: int, key: tuple):
+        p = len(self._group)
+        if self._rank == root:
+            out = [None] * p
+            out[root] = data
+            for r in range(p):
+                if r != root:
+                    out[r] = yield self._recv_op(r, tag, key)
+            return out
+        self._send_coll(root, tag, key, data)
+        return None
+
+    def _scan_sched(self, data: Any, f: Callable, tag: int, key: tuple):
+        """Inclusive prefix reduction as a linear chain through the
+        ranks: rank r receives f(x_0, ..., x_{r-1}), folds its own."""
+        if self._rank == 0:
+            acc = data
+        else:
+            acc = f((yield self._recv_op(self._rank - 1, tag, key)), data)
+        if self._rank + 1 < len(self._group):
+            self._send_coll(self._rank + 1, tag, key, acc)
+        return acc
+
+    def _require_per_rank(self, seq: Sequence[Any] | None, op: str) -> None:
+        """Eager misuse check for list-per-rank collectives: raise on the
+        *caller's* thread, before any message moves or any schedule is
+        handed to the engine -- not from inside a parked generator."""
+        if seq is None or len(seq) != len(self._group):
+            raise ValueError(
+                f"{op} needs one item per rank "
+                f"(got {None if seq is None else len(seq)}, "
+                f"world size {len(self._group)})")
+
+    def _alltoall_sched(self, chunks: Sequence[Any], tag: int, key: tuple):
+        p = len(self._group)
+        for r in range(p):
+            if r != self._rank:
+                self._send_coll(r, tag, key, chunks[r])
+        out = [None] * p
+        out[self._rank] = chunks[self._rank]
+        for r in range(p):
+            if r != self._rank:
+                out[r] = yield self._recv_op(r, tag, key)
+        return out
+
+    def _scatter_sched(self, root: int, items: Sequence[Any] | None,
+                       tag: int, key: tuple):
+        """MPI_Scatter: ``items`` (one per rank, significant only at
+        root) are fanned out; each rank returns its own item."""
+        p = len(self._group)
+        if self._rank == root:
+            for r in range(p):
+                if r != root:
+                    self._send_coll(r, tag, key, items[r])
+            return items[root]
+        return (yield self._recv_op(root, tag, key))
+
+    def _reducescatter_sched(self, chunks: Sequence[Any], f: Callable,
+                             tag: int, key: tuple):
+        gathered = yield from self._allgather_sched(list(chunks), tag, key)
+        mine = gathered[0][self._rank]
+        for contrib in gathered[1:]:
+            mine = f(mine, contrib[self._rank])
+        return mine
 
     def barrier(self) -> None:
         """Message-realized barrier: gather a token at rank 0, then release
@@ -878,72 +1206,90 @@ class MessageComm:
             self._allgather_sched(data, -4, self._next_key()),
             op="iallgather")
 
+    def ireduce(self, root: int, data: Any,
+                f: Callable[[Any, Any], Any]) -> Request:
+        """Nonblocking reduce; ``wait`` returns the fold at ``root`` and
+        None elsewhere."""
+        return self._submit_sched(
+            self._reduce_sched(root, data, f, -7, self._next_key()),
+            op="ireduce")
+
+    def igather(self, root: int, data: Any) -> Request:
+        """Nonblocking gather; ``wait`` returns the rank-ordered list at
+        ``root`` and None elsewhere."""
+        return self._submit_sched(
+            self._gather_sched(root, data, -8, self._next_key()),
+            op="igather")
+
+    def iscatter(self, root: int, items: Sequence[Any] | None = None
+                 ) -> Request:
+        """Nonblocking scatter; ``wait`` returns this rank's item."""
+        if self._rank == root:
+            self._require_per_rank(items, "iscatter")
+        return self._submit_sched(
+            self._scatter_sched(root, items, -11, self._next_key()),
+            op="iscatter")
+
+    def iscan(self, data: Any, f: Callable[[Any, Any], Any]) -> Request:
+        """Nonblocking inclusive prefix reduction."""
+        return self._submit_sched(
+            self._scan_sched(data, f, -9, self._next_key()),
+            op="iscan")
+
+    def ialltoall(self, chunks: Sequence[Any]) -> Request:
+        """Nonblocking alltoall; ``wait`` returns the source-ordered
+        list of received chunks."""
+        self._require_per_rank(chunks, "ialltoall")
+        return self._submit_sched(
+            self._alltoall_sched(chunks, -5, self._next_key()),
+            op="ialltoall")
+
+    def ireducescatter(self, chunks: Sequence[Any], f: Callable) -> Request:
+        """Nonblocking reducescatter; ``wait`` returns this rank's fold."""
+        self._require_per_rank(chunks, "ireducescatter")
+        return self._submit_sched(
+            self._reducescatter_sched(chunks, f, -12, self._next_key()),
+            op="ireducescatter")
+
     def reducescatter(self, chunks: Sequence[Any], f: Callable) -> Any:
         """Each rank contributes a list of P chunks; rank i gets the f-fold
         of everyone's chunk i."""
-        if len(chunks) != len(self._group):
-            raise ValueError("reducescatter needs one chunk per rank")
-        gathered = self.allgather(list(chunks))
-        mine = gathered[0][self._rank]
-        for contrib in gathered[1:]:
-            mine = f(mine, contrib[self._rank])
-        return mine
+        self._require_per_rank(chunks, "reducescatter")
+        return self._run_sched(
+            self._reducescatter_sched(chunks, f, -12, self._next_key()))
 
     def reduce(self, root: int, data: Any, f: Callable[[Any, Any], Any]) -> Any:
         """MPI_Reduce: fold everyone's data at ``root`` (None elsewhere).
         One of the 'more methods' the paper's section 6 plans."""
-        tag = -7
-        key = self._next_key()
-        if self._rank == root:
-            acc = data
-            for r in range(len(self._group)):
-                if r != root:
-                    acc = f(acc, self._recv_coll(r, tag, key))
-            return acc
-        self._send_coll(root, tag, key, data)
-        return None
+        return self._run_sched(
+            self._reduce_sched(root, data, f, -7, self._next_key()))
 
     def gather(self, root: int, data: Any) -> list | None:
         """MPI_Gather: rank-ordered list at ``root`` (None elsewhere)."""
-        tag = -8
-        key = self._next_key()
+        return self._run_sched(
+            self._gather_sched(root, data, -8, self._next_key()))
+
+    def scatter(self, root: int, items: Sequence[Any] | None = None) -> Any:
+        """MPI_Scatter: the root's ``items`` list (one per rank) is fanned
+        out; each rank returns its own item (non-roots pass None). A bad
+        ``items`` raises at the root immediately; already-parked peers
+        unblock at their receive deadline (rooted-collective misuse is
+        asymmetric by nature)."""
         if self._rank == root:
-            out = [None] * len(self._group)
-            out[root] = data
-            for r in range(len(self._group)):
-                if r != root:
-                    out[r] = self._recv_coll(r, tag, key)
-            return out
-        self._send_coll(root, tag, key, data)
-        return None
+            self._require_per_rank(items, "scatter")
+        return self._run_sched(
+            self._scatter_sched(root, items, -11, self._next_key()))
 
     def scan(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
         """MPI_Scan: inclusive prefix reduction -- rank r receives
         f(x_0, ..., x_r). Linear chain through the ranks."""
-        tag = -9
-        key = self._next_key()
-        if self._rank == 0:
-            acc = data
-        else:
-            acc = f(self._recv_coll(self._rank - 1, tag, key), data)
-        if self._rank + 1 < len(self._group):
-            self._send_coll(self._rank + 1, tag, key, acc)
-        return acc
+        return self._run_sched(
+            self._scan_sched(data, f, -9, self._next_key()))
 
     def alltoall(self, chunks: Sequence[Any]) -> list:
-        if len(chunks) != len(self._group):
-            raise ValueError("alltoall needs one chunk per rank")
-        tag = -5
-        key = self._next_key()
-        for r in range(len(self._group)):
-            if r != self._rank:
-                self._send_coll(r, tag, key, chunks[r])
-        out = [None] * len(self._group)
-        out[self._rank] = chunks[self._rank]
-        for r in range(len(self._group)):
-            if r != self._rank:
-                out[r] = self._recv_coll(r, tag, key)
-        return out
+        self._require_per_rank(chunks, "alltoall")
+        return self._run_sched(
+            self._alltoall_sched(chunks, -5, self._next_key()))
 
     # -- split (paper section 3.1: ranks send (global rank, key, color) to the
     #    lowest participating rank; it groups by color, sorts by key, and

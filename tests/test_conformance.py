@@ -1,11 +1,12 @@
 """Cross-mode collective conformance matrix.
 
 Every collective -- blocking and nonblocking -- runs over mode {local
-threads, cluster-relay, cluster-direct} x backend {linear, ring} and is
-compared bit-exact against a numpy oracle computed in the test process.
-Payloads are int64 so the fold order (rank-ordered at the linear root,
-rotation-ordered around the ring) cannot perturb the bits: any mismatch
-is a routing/matching bug, not a float artifact.
+threads, cluster-relay, cluster-direct} x backend {linear, ring,
+segmented(-ring)} and is compared bit-exact against a numpy oracle
+computed in the test process. Payloads are int64 so the fold order
+(rank-ordered at the linear root, rotation-ordered around the ring,
+per-segment in the segmented schedules) cannot perturb the bits: any
+mismatch is a routing/matching bug, not a float artifact.
 
 This is the systematic replacement for the ad-hoc per-mode spot checks
 that previously lived scattered across test_cluster/test_cross_mode.
@@ -71,6 +72,13 @@ def clo_reducescatter(world):
     return world.reducescatter(chunks, lambda a, b: a + b)
 
 
+def clo_scatter(world):
+    r = world.get_rank()
+    items = ([_base(j) for j in range(world.get_size())]
+             if r == ROOT else None)
+    return world.scatter(ROOT, items)
+
+
 def clo_ibarrier(world):
     return world.ibarrier().wait(timeout=30) or "past"
 
@@ -90,6 +98,39 @@ def clo_iallgather(world):
     return world.iallgather(world.get_rank() * 2 + 1).wait(timeout=30)
 
 
+def clo_ireduce(world):
+    req = world.ireduce(ROOT, _base(world.get_rank()), lambda a, b: a + b)
+    return req.wait(timeout=30)
+
+
+def clo_igather(world):
+    return world.igather(ROOT, world.get_rank() * 3).wait(timeout=30)
+
+
+def clo_iscatter(world):
+    r = world.get_rank()
+    items = ([_base(j) for j in range(world.get_size())]
+             if r == ROOT else None)
+    return world.iscatter(ROOT, items).wait(timeout=30)
+
+
+def clo_iscan(world):
+    req = world.iscan(np.int64(world.get_rank() + 5), lambda a, b: a + b)
+    return req.wait(timeout=30)
+
+
+def clo_ialltoall(world):
+    r = world.get_rank()
+    chunks = [r * 10 + j for j in range(world.get_size())]
+    return world.ialltoall(chunks).wait(timeout=30)
+
+
+def clo_ireducescatter(world):
+    r = world.get_rank()
+    chunks = [np.full(3, r + d, np.int64) for d in range(world.get_size())]
+    return world.ireducescatter(chunks, lambda a, b: a + b).wait(timeout=30)
+
+
 def _oracle():
     """Expected per-rank results, computed with plain numpy."""
     allred = sum((_base(r) for r in range(N)),
@@ -104,6 +145,7 @@ def _oracle():
         "reduce": [allred if r == ROOT else None for r in range(N)],
         "gather": [[s * 3 for s in range(N)] if r == ROOT else None
                    for r in range(N)],
+        "scatter": [_base(r) for r in range(N)],
         "scan": [np.int64(scan[r]) for r in range(N)],
         "alltoall": [[j * 10 + r for j in range(N)] for r in range(N)],
         "reducescatter": [np.full(3, rs_sum + N * r, np.int64)
@@ -112,16 +154,28 @@ def _oracle():
         "ibcast": [_base(ROOT)] * N,
         "iallreduce": [allred] * N,
         "iallgather": [[r * 2 + 1 for r in range(N)]] * N,
+        "ireduce": [allred if r == ROOT else None for r in range(N)],
+        "igather": [[s * 3 for s in range(N)] if r == ROOT else None
+                    for r in range(N)],
+        "iscatter": [_base(r) for r in range(N)],
+        "iscan": [np.int64(scan[r]) for r in range(N)],
+        "ialltoall": [[j * 10 + r for j in range(N)] for r in range(N)],
+        "ireducescatter": [np.full(3, rs_sum + N * r, np.int64)
+                           for r in range(N)],
     }
 
 
 CLOSURES = {
     "barrier": clo_barrier, "broadcast": clo_broadcast,
     "allreduce": clo_allreduce, "allgather": clo_allgather,
-    "reduce": clo_reduce, "gather": clo_gather, "scan": clo_scan,
-    "alltoall": clo_alltoall, "reducescatter": clo_reducescatter,
+    "reduce": clo_reduce, "gather": clo_gather, "scatter": clo_scatter,
+    "scan": clo_scan, "alltoall": clo_alltoall,
+    "reducescatter": clo_reducescatter,
     "ibarrier": clo_ibarrier, "ibcast": clo_ibcast,
     "iallreduce": clo_iallreduce, "iallgather": clo_iallgather,
+    "ireduce": clo_ireduce, "igather": clo_igather,
+    "iscatter": clo_iscatter, "iscan": clo_iscan,
+    "ialltoall": clo_ialltoall, "ireducescatter": clo_ireducescatter,
 }
 
 ORACLE = _oracle()
@@ -139,16 +193,21 @@ def _eq(a, b) -> bool:
 
 
 def _run(closure, mode: str, backend: str) -> list:
+    # the forced segmented backend also gets a tiny segment size so the
+    # matrix payloads (48-byte arrays) stream as multiple segments per
+    # chunk rather than degenerating to one-segment transfers
+    seg = 8 if backend == "segmented" else None
     if mode == "local":
-        return parallelize_func(closure, backend=backend,
-                                timeout=60).execute(N)
+        return parallelize_func(closure, backend=backend, timeout=60,
+                                segment_bytes=seg).execute(N)
     plane = mode.split("-", 1)[1]
     pool = get_pool(N, data_plane=plane)
-    return pool.run(closure, backend=backend, timeout=60)
+    return pool.run(closure, backend=backend, timeout=60,
+                    segment_bytes=seg)
 
 
-@pytest.mark.timeout(120)
-@pytest.mark.parametrize("backend", ["linear", "ring"])
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("backend", ["linear", "ring", "segmented"])
 @pytest.mark.parametrize("mode", ["local", "cluster-relay",
                                   "cluster-direct"])
 @pytest.mark.parametrize("op", sorted(CLOSURES))
@@ -163,7 +222,7 @@ def test_collective_conformance(op, mode, backend):
 @pytest.mark.timeout(120)
 @pytest.mark.parametrize("mode", ["local", "cluster-direct"])
 def test_ring_equals_linear_for_commutative_fold(mode):
-    """The two message backends realize the same mathematical collective
+    """The message backends realize the same mathematical collective
     for commutative folds: bit-identical int results across the whole op
     set (the matrix above pins each to the oracle; this pins them to
     each other within one process world)."""
@@ -174,4 +233,5 @@ def test_ring_equals_linear_for_commutative_fold(mode):
                 world.iallreduce(np.int64(r), lambda a, b: a + b).wait(30))
     lin = _run(closure, mode, "linear")
     ring = _run(closure, mode, "ring")
-    assert lin == ring
+    seg = _run(closure, mode, "segmented")
+    assert lin == ring == seg

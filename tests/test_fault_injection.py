@@ -92,6 +92,62 @@ def test_sigkill_mid_iallreduce_fails_requests_and_recovers(tmp_path):
 
 
 @pytest.mark.timeout(120)
+def test_sigkill_mid_segmented_iallreduce_fails_fast(tmp_path):
+    """Segmented transfers must not accumulate per-segment hangs: a rank
+    SIGKILLed mid-segmented-iallreduce (hundreds of outstanding segment
+    receives in the schedule) fails every survivor's Request with
+    PeerDeadError at the *first* parked segment -- once, promptly -- and
+    ``ClusterSupervisor`` still recovers on a fresh world."""
+    n = 4
+    marker_dir = str(tmp_path / "markers")
+    os.makedirs(marker_dir)
+
+    def make_closure(run):
+        def closure(comm):
+            # tiny segments: the 16 KiB payload streams as ~hundreds of
+            # per-segment messages through the segmented ring schedule
+            comm = comm.with_segment_bytes(256)
+            rank = comm.get_rank()
+            if run.attempt == 0:
+                if rank == 2:
+                    time.sleep(0.4)     # let peers park mid-schedule
+                    os.kill(os.getpid(), signal.SIGKILL)
+                req = comm.iallreduce(np.full(2048, float(rank)),
+                                      lambda a, b: a + b)
+                t0 = time.monotonic()
+                try:
+                    req.wait(timeout=SLOW_TIMEOUT)
+                except PeerDeadError as e:
+                    _write_marker(marker_dir, rank,
+                                  time.monotonic() - t0, e)
+                    raise
+                return "attempt-0 completed?!"
+            red = comm.allreduce(np.full(2048, float(rank)),
+                                 lambda a, b: a + b)
+            return float(red[0])
+        return closure
+
+    policy = ft.RecoveryPolicy(degrade_backend="linear", recovery_steps=1,
+                               max_restarts=2)
+    sup = ClusterSupervisor(str(tmp_path / "ckpt"), policy=policy,
+                            fast_backend="segmented", timeout=SLOW_TIMEOUT,
+                            hb_interval=0.05, hb_timeout=0.8)
+    out = sup.run(make_closure, n)
+
+    assert out == [float(sum(range(n)))] * n
+    assert sup.state.restarts == 1 and len(sup.failures) == 1
+
+    markers = _read_markers(marker_dir)
+    assert sorted(markers) == [0, 1, 3], markers     # every survivor
+    for rank, (elapsed, kind, msg) in markers.items():
+        assert kind == "PeerDeadError", (rank, kind, msg)
+        assert "declared dead" in msg and "2" in msg
+        # one prompt failure at the first parked segment -- NOT a
+        # timeout per segment (which would multiply far past this bound)
+        assert elapsed < SLOW_TIMEOUT / 3, (rank, elapsed)
+
+
+@pytest.mark.timeout(120)
 def test_peer_death_fails_blocking_receive_and_irecv(tmp_path):
     """The poison covers every receive discipline: a blocking receive and
     a pending irecv Request targeting (or transitively stuck behind) the

@@ -291,6 +291,113 @@ def test_pool_leaked_request_does_not_poison_next_job():
         assert pool.run(clean, backend="ring") == [3, 3, 3]
 
 
+def _progress_threads() -> list[str]:
+    return [t.name for t in threading.enumerate()
+            if t.name.startswith("mpignite-progress")]
+
+
+def test_engine_soak_mixed_ops_cancel_leak_teardown():
+    """Soak the engine with N concurrent *mixed* nonblocking requests per
+    rank -- every collective family at once, some cancelled, some leaked
+    -- and assert one engine thread per rank throughout plus full
+    engine-thread teardown when the world ends."""
+    K = 4           # rounds of the full mixed set
+
+    def closure(world):
+        rank, size = world.get_rank(), world.get_size()
+        before = len(_progress_threads())
+        add = lambda a, b: a + b
+        reqs = []
+        for k in range(K):
+            data = np.arange(6, dtype=np.int64) * (rank + 1) + k
+            reqs += [
+                world.iallreduce(data, add),
+                world.iallgather((rank, k)),
+                world.ireduce(0, np.int64(rank + k), add),
+                world.igather(1, rank * 10 + k),
+                world.iscan(np.int64(rank + 1), add),
+                world.ialltoall([(rank, j, k) for j in range(size)]),
+                world.iscatter(2, ([(j, k) for j in range(size)]
+                                   if rank == 2 else None)),
+                world.ibcast(0, ("root", k) if rank == 0 else None),
+            ]
+        in_flight = len(_progress_threads())
+        # cancel a slice before completion (some will already be done --
+        # cancel() returning False is part of the contract under test)
+        cancelled = [r.cancel() for r in reqs[::7]]
+        vals = []
+        for i, req in enumerate(reqs):
+            if i % 7 == 0 and cancelled[i // 7]:
+                with pytest.raises(CancelledError):
+                    req.wait(timeout=10)
+            else:
+                vals.append(req.wait(timeout=30))
+        # leak a fresh batch on purpose: the world teardown must fail
+        # them without wedging the join
+        world.irecv((rank + 1) % size, 99)
+        if rank != 0:           # rank 0 absent => peers' schedules park
+            world.iallreduce(np.int64(1), add)
+        # engine threads: at most one per rank (+ shared deliver/expiry
+        # threads are named differently and excluded by the filter)
+        return before, in_flight, len(_progress_threads())
+
+    n = 3
+    out = parallelize_func(closure, backend="ring", timeout=20).execute(n)
+    for before, in_flight, after in out:
+        assert in_flight <= n, (before, in_flight)
+        assert after <= n, after
+    # teardown: every engine thread died with the world
+    deadline = time.monotonic() + 5
+    while _progress_threads() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert _progress_threads() == []
+
+
+@pytest.mark.cluster
+@pytest.mark.timeout(120)
+def test_pool_engine_soak_across_jobs_no_leakage():
+    """The pooled twin of the soak: successive jobs each post mixed
+    requests (some cancelled, some leaked mid-collective), and the SAME
+    warm pool keeps answering correctly -- stale schedules never resume
+    into a later job, and per-job engines do not accumulate threads in
+    the executors."""
+    from repro.core import ClusterPool
+
+    def soak(world):
+        rank, size = world.get_rank(), world.get_size()
+        add = lambda a, b: a + b
+        reqs = [world.iallreduce(np.arange(5, dtype=np.int64) * rank, add),
+                world.iscan(np.int64(rank), add),
+                world.ialltoall([rank * 10 + j for j in range(size)]),
+                world.igather(0, rank)]
+        reqs[1].cancel()
+        vals = [reqs[0].wait(timeout=20), reqs[2].wait(timeout=20),
+                reqs[3].wait(timeout=20)]
+        world.irecv((rank + 1) % size, 7)       # leaked p2p request
+        if rank != 0:                           # leaked, half-parked
+            world.iallreduce(np.int64(1), add)  # collective (no rank 0)
+        return (vals[0].tolist(), vals[1], vals[2],
+                len(_progress_threads()))
+
+    def clean(world):
+        return int(world.allreduce(np.int64(world.get_rank()),
+                                   lambda a, b: a + b))
+
+    n = 3
+    want_red = (np.arange(5, dtype=np.int64) * sum(range(n))).tolist()
+    with ClusterPool(n, timeout=20) as pool:
+        for round_ in range(3):
+            out = pool.run(soak, backend="ring", timeout=20)
+            for rank, (red, a2a, gat, nthreads) in enumerate(out):
+                assert red == want_red, (round_, rank, red)
+                assert a2a == [j * 10 + rank for j in range(n)]
+                assert gat == (list(range(n)) if rank == 0 else None)
+                # one engine per live job (the previous job's engine is
+                # closed at dispatch-time purge): never accumulating
+                assert nthreads <= 2, (round_, rank, nthreads)
+            assert pool.run(clean, timeout=20) == [sum(range(n))] * n
+
+
 @pytest.mark.cluster
 def test_cluster_nonblocking_matches_local():
     def closure(world):

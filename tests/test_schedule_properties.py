@@ -1,0 +1,449 @@
+"""Property-based schedule conformance harness.
+
+One case generator drives every message-composed collective -- blocking
+AND nonblocking driver, every backend (linear / whole-buffer ring /
+segmented ring) -- across world sizes 2-5, payload shapes/dtypes
+(including 0-d and zero-size arrays and ragged pytrees), and segment
+sizes chosen to *not* divide the payload, asserting bit-exactness
+against a numpy oracle computed in the test process.
+
+Payload values are small integers (exactly representable in every dtype
+drawn), so any legal fold order -- rank-ordered at the linear root,
+rotation-ordered around the ring, per-segment in the segmented
+schedules -- must reproduce the oracle bit-for-bit: a mismatch is a
+routing/chunking/matching bug, never a float artifact.
+
+Three layers, mirroring ``test_wire_fuzz``:
+
+- an always-on *seeded* sweep (no hypothesis needed) with a bounded
+  fast-lane profile and a deeper profile marked ``slow`` + ``cluster``
+  so the cluster CI lane carries the heavy half;
+- hypothesis-driven sweeps of the same case space where hypothesis is
+  installed (CI), with shrinking on failure;
+- directed edge cases the random layers must never be trusted to hit
+  (non-dividing segments, 0-d/empty payloads, the auto-upgrade
+  threshold).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import parallelize_func, waitall
+from repro.core import groups as G
+
+OPS = ("barrier", "broadcast", "allreduce", "allgather", "reduce",
+       "gather", "scatter", "scan", "alltoall", "reducescatter")
+DRIVERS = ("blocking", "nonblocking")
+BACKENDS = ("linear", "ring", "segmented")
+DTYPES = (np.int32, np.int64, np.float64)
+#: shapes include 0-d, zero-size, and sizes that no segment/world size
+#: divides evenly
+SHAPES = ((), (1,), (7,), (3, 4), (2, 3, 2), (13,), (0,), (5, 0, 2))
+#: segment sizes in BYTES: tiny (many segments, never dividing an int64
+#: payload evenly), moderate, 0 (auto-upgrade disabled), None (default)
+SEGMENT_BYTES = (1, 3, 8, 24, 1000, 0, None)
+
+
+def _tree_map2(f, a, b):
+    """Structure-preserving binary map over the ragged pytrees this
+    harness generates (dicts / lists / leaves) -- the tree-aware fold a
+    user would pass for pytree payloads."""
+    if isinstance(a, dict):
+        return {k: _tree_map2(f, a[k], b[k]) for k in a}
+    if isinstance(a, (list, tuple)):
+        return type(a)(_tree_map2(f, x, y) for x, y in zip(a, b))
+    return f(a, b)
+
+
+def _base_array(rank: int, shape: tuple, dtype, salt: int = 0) -> np.ndarray:
+    """Deterministic per-rank payload: small exact integers."""
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    flat = (np.arange(n, dtype=np.int64) % 17) * (rank + 1) + rank + salt
+    return flat.astype(dtype).reshape(shape)
+
+
+def _make_payload(kind: str, rank: int, shape: tuple, dtype,
+                  salt: int = 0):
+    if kind == "array":
+        return _base_array(rank, shape, dtype, salt)
+    # ragged pytree: leaves of *different* shapes, one of them the drawn
+    # shape -- exercises the non-array fallback of every segmented path
+    return {"a": _base_array(rank, shape, dtype, salt),
+            "b": [_base_array(rank, (3,), dtype, salt + 5),
+                  _base_array(rank, (2, 2), dtype, salt + 9)]}
+
+
+def _add(a, b):
+    return _tree_map2(np.add, a, b)
+
+
+def _payloads(kind, n, shape, dtype, salt=0):
+    return [_make_payload(kind, r, shape, dtype, salt) for r in range(n)]
+
+
+def _oracle(op, kind, n, shape, dtype, root):
+    """Expected per-rank results, folded rank-ordered with numpy."""
+    xs = _payloads(kind, n, shape, dtype)
+    if op == "barrier":
+        return [None] * n
+    if op == "broadcast":
+        return [xs[root]] * n
+    if op == "allreduce":
+        acc = xs[0]
+        for x in xs[1:]:
+            acc = _add(acc, x)
+        return [acc] * n
+    if op == "allgather":
+        return [xs] * n
+    if op == "reduce":
+        acc = xs[0]
+        for x in xs[1:]:
+            acc = _add(acc, x)
+        return [acc if r == root else None for r in range(n)]
+    if op == "gather":
+        return [xs if r == root else None for r in range(n)]
+    if op == "scatter":
+        items = _payloads(kind, n, shape, dtype, salt=100)
+        return [items[r] for r in range(n)]
+    if op == "scan":
+        out, acc = [], None
+        for x in xs:
+            acc = x if acc is None else _add(acc, x)
+            out.append(acc)
+        return out
+    if op == "alltoall":
+        mat = [[_make_payload(kind, s, shape, dtype, salt=10 * d)
+                for d in range(n)] for s in range(n)]
+        return [[mat[s][r] for s in range(n)] for r in range(n)]
+    if op == "reducescatter":
+        mat = [[_make_payload(kind, s, shape, dtype, salt=10 * d)
+                for d in range(n)] for s in range(n)]
+        out = []
+        for r in range(n):
+            acc = mat[0][r]
+            for s in range(1, n):
+                acc = _add(acc, mat[s][r])
+            out.append(acc)
+        return out
+    raise AssertionError(op)
+
+
+def _closure(op, kind, shape, dtype, root, driver):
+    """One closure covering the whole op surface; captured args arrive
+    via pickle in cluster mode, so everything is plain data. Array
+    payloads fold with ``np.add`` (a ufunc, so plain ``ring`` exercises
+    the *automatic* segmented upgrade too); pytrees use the tree-aware
+    fold (and always take the whole-buffer fallback)."""
+    fold = np.add if kind == "array" else _add
+
+    def run(world):
+        r, n = world.get_rank(), world.get_size()
+        data = _make_payload(kind, r, shape, dtype)
+        items = _payloads(kind, n, shape, dtype, salt=100) \
+            if r == root else None
+        chunks = [_make_payload(kind, r, shape, dtype, salt=10 * d)
+                  for d in range(n)]
+        if driver == "blocking":
+            if op == "barrier":
+                return world.barrier()
+            if op == "broadcast":
+                return world.broadcast(root, data if r == root else None)
+            if op == "allreduce":
+                return world.allreduce(data, fold)
+            if op == "allgather":
+                return world.allgather(data)
+            if op == "reduce":
+                return world.reduce(root, data, fold)
+            if op == "gather":
+                return world.gather(root, data)
+            if op == "scatter":
+                return world.scatter(root, items)
+            if op == "scan":
+                return world.scan(data, fold)
+            if op == "alltoall":
+                return world.alltoall(chunks)
+            if op == "reducescatter":
+                return world.reducescatter(chunks, fold)
+        else:
+            if op == "barrier":
+                req = world.ibarrier()
+            elif op == "broadcast":
+                req = world.ibcast(root, data if r == root else None)
+            elif op == "allreduce":
+                req = world.iallreduce(data, fold)
+            elif op == "allgather":
+                req = world.iallgather(data)
+            elif op == "reduce":
+                req = world.ireduce(root, data, fold)
+            elif op == "gather":
+                req = world.igather(root, data)
+            elif op == "scatter":
+                req = world.iscatter(root, items)
+            elif op == "scan":
+                req = world.iscan(data, fold)
+            elif op == "alltoall":
+                req = world.ialltoall(chunks)
+            elif op == "reducescatter":
+                req = world.ireducescatter(chunks, fold)
+            return waitall([req], timeout=30)[0]
+        raise AssertionError(op)
+    return run
+
+
+def _bit_eq(a, b) -> bool:
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        a, b = np.asarray(a), np.asarray(b)
+        return (a.dtype == b.dtype and a.shape == b.shape
+                and np.array_equal(a, b))
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_bit_eq(a[k], b[k]) for k in a))
+    if isinstance(a, (list, tuple)):
+        return (isinstance(b, (list, tuple)) and len(a) == len(b)
+                and all(_bit_eq(x, y) for x, y in zip(a, b)))
+    return type(a) is type(b) and a == b
+
+
+def check_case(op, driver, backend, n, kind, shape, dtype, seg, root):
+    got = parallelize_func(
+        _closure(op, kind, shape, dtype, root, driver),
+        backend=backend, timeout=30, segment_bytes=seg).execute(n)
+    want = _oracle(op, kind, n, shape, dtype, root)
+    for rank, (g, w) in enumerate(zip(got, want)):
+        assert _bit_eq(g, w), (op, driver, backend, n, kind, shape,
+                               np.dtype(dtype).name, seg, rank, g, w)
+
+
+# ---------------------------------------------------------------------------
+# Always-on seeded sweep (no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+def _draw_case_rng(rng: random.Random):
+    n = rng.randint(2, 5)
+    return (rng.choice(OPS), rng.choice(DRIVERS), rng.choice(BACKENDS),
+            n, rng.choice(("array", "array", "pytree")),
+            rng.choice(SHAPES), rng.choice(DTYPES),
+            rng.choice(SEGMENT_BYTES), rng.randrange(n))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_schedule_conformance_seeded(seed):
+    """Fast-lane profile: a bounded seeded sweep of the cross product."""
+    rng = random.Random(seed)
+    for _ in range(4):
+        check_case(*_draw_case_rng(rng))
+
+
+@pytest.mark.slow
+@pytest.mark.cluster
+@pytest.mark.timeout(600)
+@pytest.mark.parametrize("seed", range(1000, 1040))
+def test_schedule_conformance_seeded_deep(seed):
+    """Cluster-lane profile: the same sweep, ~4x deeper."""
+    rng = random.Random(seed)
+    for _ in range(7):
+        check_case(*_draw_case_rng(rng))
+
+
+# ---------------------------------------------------------------------------
+# Directed cases the random sweeps must never be trusted to hit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("driver", DRIVERS)
+@pytest.mark.parametrize("seg", [1, 3, 8, None])
+def test_segmented_allreduce_nondividing_segments(driver, seg):
+    """Segment sizes that divide neither the payload nor the per-rank
+    chunks, with a world size that does not divide the payload either."""
+    check_case("allreduce", driver, "segmented", 3, "array", (13,),
+               np.int64, seg, 0)
+
+
+@pytest.mark.parametrize("backend", ["ring", "segmented"])
+@pytest.mark.parametrize("op", ["allreduce", "broadcast", "allgather"])
+def test_segmented_zero_d_and_empty(backend, op):
+    """0-d arrays and zero-size arrays through every segmented path."""
+    for shape in [(), (0,), (5, 0, 2)]:
+        check_case(op, "blocking", backend, 4, "array", shape,
+                   np.int64, 1, 1)
+
+
+def test_ragged_pytree_takes_whole_buffer_fallback_bit_exact():
+    """A ragged pytree under the forced segmented backend falls back to
+    the whole-buffer ring and still matches the oracle bit-exactly."""
+    for driver in DRIVERS:
+        check_case("allreduce", driver, "segmented", 4, "pytree", (7,),
+                   np.int64, 1, 0)
+
+
+def test_ring_auto_upgrades_to_segmented_above_threshold():
+    """Under plain ``ring``, a ufunc-folded payload >= the segment
+    threshold streams segmented (message count rises with the pipelined
+    schedule); below the threshold -- or with an arbitrary callable
+    fold, whose semantics per-segment application could change -- the
+    whole-buffer ring is kept. Observed via the send hook."""
+    from repro.core.local import LocalComm
+
+    counts = {}
+    orig = LocalComm._put
+
+    def counting_put(self, *a, **kw):
+        counts[self._backend] = counts.get(self._backend, 0) + 1
+        return orig(self, *a, **kw)
+
+    def make_closure(fold):
+        def closure(world):
+            arr = np.arange(64, dtype=np.int64)
+            return world.allreduce(arr, fold).sum()
+        return closure
+
+    def messages(fold, seg):
+        counts.clear()
+        parallelize_func(make_closure(fold), backend="ring", timeout=30,
+                         segment_bytes=seg).execute(2)
+        return counts.get("ring", 0)
+
+    LocalComm._put = counting_put
+    try:
+        whole = messages(np.add, 10 ** 9)       # below threshold
+        segmented = messages(np.add, 64)        # above, elementwise fold
+        # an arbitrary callable is NOT provably elementwise: plain ring
+        # must keep the whole-buffer schedule however big the payload,
+        # or working non-elementwise folds would silently change meaning
+        lam = messages(lambda a, b: a + b, 64)
+    finally:
+        LocalComm._put = orig
+    # whole-buffer ring: one message per rank (p=2). Segmented: chunks
+    # stream as ceil(256B chunk / 64B segment) messages per phase.
+    assert whole == 2, whole
+    assert segmented > whole, (whole, segmented)
+    assert lam == whole, (lam, whole)
+
+
+def test_non_elementwise_fold_is_never_segmented_under_plain_ring():
+    """The semantic guard end-to-end: an associative+commutative but
+    NON-elementwise fold (sorted top-k merge) stays correct under plain
+    ``ring`` at any payload size, because auto-upgrade is restricted to
+    np.ufunc folds. (Forcing ``segmented`` opts into the elementwise
+    contract and is allowed to differ.)"""
+    K = 4
+
+    def topk_merge(a, b):
+        return np.sort(np.concatenate([a, b]))[-K:]
+
+    def closure(world):
+        r = world.get_rank()
+        x = np.sort((np.arange(100, dtype=np.int64) * 37 + r * 53) % 997)
+        return world.allreduce(x[-K:], topk_merge)
+
+    want_pool = np.concatenate(
+        [(np.arange(100, dtype=np.int64) * 37 + r * 53) % 997
+         for r in range(3)])
+    want = np.sort(want_pool)[-K:]
+    # tiny segment threshold: would have re-routed this fold pre-guard
+    out = parallelize_func(closure, backend="ring", timeout=30,
+                           segment_bytes=1).execute(3)
+    for got in out:
+        assert np.array_equal(got, want), (got, want)
+
+
+def test_backend_aliases_accepted():
+    from repro.core.matching import normalize_backend
+    assert normalize_backend("native") == "linear"
+    assert normalize_backend("segmented-ring") == "segmented"
+    with pytest.raises(ValueError, match="unknown message backend"):
+        normalize_backend("bogus")
+
+
+# ---------------------------------------------------------------------------
+# Pure chunk/segment math invariants (hypothesis where installed, seeded
+# fallback everywhere)
+# ---------------------------------------------------------------------------
+
+def _check_chunk_bounds(n, p):
+    bounds = G.chunk_bounds(n, p)
+    assert len(bounds) == p + 1
+    assert bounds[0] == 0 and bounds[-1] == n
+    sizes = [bounds[i + 1] - bounds[i] for i in range(p)]
+    assert all(s >= 0 for s in sizes)
+    assert max(sizes) - min(sizes) <= 1          # near-equal
+    assert sizes == sorted(sizes, reverse=True)  # long chunks first
+
+
+def _check_segment_spans(length, seg):
+    spans = G.segment_spans(length, seg)
+    if length <= 0:
+        assert spans == []
+        return
+    assert spans[0][0] == 0 and spans[-1][1] == length
+    for (a, b), (c, d) in zip(spans, spans[1:]):
+        assert b == c                   # contiguous, ordered
+    assert all(0 < b - a <= seg for a, b in spans)
+
+
+def test_chunk_and_segment_math_seeded():
+    rng = random.Random(7)
+    for _ in range(500):
+        _check_chunk_bounds(rng.randrange(0, 10 ** 6), rng.randint(1, 64))
+        _check_segment_spans(rng.randrange(0, 10 ** 5),
+                             rng.randint(1, 10 ** 4))
+    with pytest.raises(ValueError):
+        G.chunk_bounds(10, 0)
+    with pytest.raises(ValueError):
+        G.segment_spans(10, 0)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps of the same case space (CI installs hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:     # container without hypothesis: seeded sweep above
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    COMMON = dict(deadline=None, derandomize=True,
+                  suppress_health_check=[HealthCheck.too_slow,
+                                         HealthCheck.data_too_large,
+                                         HealthCheck.filter_too_much])
+
+    def _draw_case(data):
+        op = data.draw(st.sampled_from(OPS), label="op")
+        driver = data.draw(st.sampled_from(DRIVERS), label="driver")
+        backend = data.draw(st.sampled_from(BACKENDS), label="backend")
+        n = data.draw(st.integers(2, 5), label="world")
+        kind = data.draw(st.sampled_from(("array", "pytree")),
+                         label="kind")
+        shape = data.draw(st.sampled_from(SHAPES), label="shape")
+        dtype = data.draw(st.sampled_from(DTYPES), label="dtype")
+        seg = data.draw(st.sampled_from(SEGMENT_BYTES),
+                        label="segment_bytes")
+        root = data.draw(st.integers(0, n - 1), label="root")
+        return op, driver, backend, n, kind, shape, dtype, seg, root
+
+    @settings(max_examples=50, **COMMON)
+    @given(data=st.data())
+    def test_schedule_conformance_hypothesis_bounded(data):
+        """Fast-lane hypothesis profile (shrinks failures to a minimal
+        op x world x payload x segment counterexample)."""
+        check_case(*_draw_case(data))
+
+    @pytest.mark.slow
+    @pytest.mark.cluster
+    @pytest.mark.timeout(600)
+    @settings(max_examples=250, **COMMON)
+    @given(data=st.data())
+    def test_schedule_conformance_hypothesis_deep(data):
+        """Cluster-lane hypothesis profile: the same harness, 5x deeper."""
+        check_case(*_draw_case(data))
+
+    @given(n=st.integers(0, 10 ** 6), p=st.integers(1, 64))
+    def test_chunk_bounds_partition(n, p):
+        _check_chunk_bounds(n, p)
+
+    @given(length=st.integers(0, 10 ** 5), seg=st.integers(1, 10 ** 4))
+    def test_segment_spans_cover_exactly(length, seg):
+        _check_segment_spans(length, seg)
