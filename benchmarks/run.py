@@ -305,6 +305,68 @@ def bench_listing2_ring_segmented(quick: bool):
     ROWS.append((f"listing2_ring_segmented_speedup_n{n}", 0.0, verdict))
 
 
+TRACE_OVERHEAD_ACCEPTANCE = 1.05    # disabled-path tax on warm ring jobs
+
+
+def bench_tracing_overhead(quick: bool, n: int = 16):
+    """Observability-plane cost on the listing-2 warm/direct ring.
+
+    With tracing off every instrumentation point in the runtime is a
+    pointer compare (``tracer is None``), so an untraced warm job must
+    stay within TRACE_OVERHEAD_ACCEPTANCE of the plain warm row measured
+    above -- the same code path timed independently. The gate catches
+    tracing accidentally left enabled (env leak, flag-resolution bug)
+    and per-call work creeping into the disabled guards. The traced
+    timing and its phase breakdown ride along as info rows: that cost is
+    opt-in by construction."""
+    from repro.core.cluster import get_pool
+
+    def ring(world):
+        rank, size = world.get_rank(), world.get_size()
+        if rank == 0:
+            world.send(1, 0, 42)
+            return world.receive(size - 1, 0)
+        t = world.receive(rank - 1, 0)
+        world.send((rank + 1) % size, 0, t)
+        return t
+
+    base = row_value(f"listing2_ring_cluster_warm_direct_n{n}")
+    pool = get_pool(n, data_plane="direct")
+    reps = 5 if quick else 9
+
+    def measure(rounds, trace):
+        ts = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            out = pool.run(ring, trace=trace)
+            ts.append((time.perf_counter() - t0) * 1e6)
+            assert out[0] == 42
+        return min(ts)
+
+    measure(1, False)                       # warmup
+    t_off = measure(reps, False)
+    if base and t_off / base > TRACE_OVERHEAD_ACCEPTANCE:
+        # one deeper retry before declaring a regression: min-of-more
+        # shakes off a noisy neighbor, a real disabled-path tax stays
+        t_off = measure(2 * reps, False)
+    t_on = measure(max(3, reps // 2), True)
+    breakdown = (pool.last_trace.phase_breakdown()
+                 if pool.last_trace is not None else "")
+
+    ROWS.append((f"listing2_ring_tracing_off_n{n}", t_off,
+                 "warm direct ring, $MPIGNITE_TRACE unset (guards only)"))
+    ROWS.append((f"listing2_ring_tracing_on_n{n}", t_on,
+                 f"trace=True incl driver aggregation; {breakdown}"))
+    if base:
+        ratio = t_off / base
+        verdict = (f"{ratio:.3f}x untraced vs plain warm row (acceptance: "
+                   f"<={TRACE_OVERHEAD_ACCEPTANCE}x)")
+        if ratio > TRACE_OVERHEAD_ACCEPTANCE:
+            verdict = (f"FAILED: disabled-path overhead {ratio:.3f}x > "
+                       f"{TRACE_OVERHEAD_ACCEPTANCE}x")
+        ROWS.append((f"listing2_ring_tracing_overhead_n{n}", 0.0, verdict))
+
+
 def bench_listing4_2d_matvec():
     from repro.core import parallelize_func
     n = 3
@@ -597,6 +659,8 @@ REQUIRED_ROW_PREFIXES = (
     "listing2_ring_overlap_speedup",
     "listing2_ring_segmented_whole", "listing2_ring_segmented_chunked",
     "listing2_ring_segmented_speedup",
+    "listing2_ring_tracing_off", "listing2_ring_tracing_on",
+    "listing2_ring_tracing_overhead",
     "listing4_2d_matvec_local", "listing4_2d_matvec_cluster",
     "figure1_api_parity", "wire_codec_roundtrip",
 )
@@ -629,6 +693,7 @@ def main() -> None:
     bench_listing2_ring()
     bench_listing2_ring_overlap(args.quick)
     bench_listing2_ring_segmented(args.quick)
+    bench_tracing_overhead(args.quick)
     bench_listing4_2d_matvec()
     bench_spawn_launcher(args.quick)
     bench_figure1_api_parity()

@@ -54,7 +54,8 @@ class ParallelClosure:
     """RDD-of-a-function (paper section 3.2)."""
 
     def __init__(self, fn: Callable, backend: str = "native",
-                 timeout: float = 60.0, segment_bytes: int | None = None):
+                 timeout: float = 60.0, segment_bytes: int | None = None,
+                 trace: bool | None = None):
         self._fn = fn
         self._backend = backend
         self._timeout = timeout
@@ -62,16 +63,24 @@ class ParallelClosure:
         # None defers to $MPIGNITE_SEGMENT_BYTES. SPMD mode ignores it:
         # PeerComm's ring collectives are already chunked at trace time.
         self._segment_bytes = segment_bytes
+        # runtime tracing for the message runtimes; None defers to
+        # $MPIGNITE_TRACE. The resulting obs.JobTrace of the most recent
+        # traced execute() lands on ``self.last_trace``.
+        self._trace = trace
+        self.last_trace = None
 
     def execute(self, n: int | None = None, *, mode: str = "local",
                 mesh: Mesh | None = None, jit: bool = True) -> list:
         if mode == "local":
             if n is None:
                 raise ValueError("local mode requires an instance count")
-            return ParallelFuncRDD(self._fn, timeout=self._timeout,
-                                   backend=self._backend,
-                                   segment_bytes=self._segment_bytes
-                                   ).execute(n)
+            rdd = ParallelFuncRDD(self._fn, timeout=self._timeout,
+                                  backend=self._backend,
+                                  segment_bytes=self._segment_bytes,
+                                  trace=self._trace)
+            out = rdd.execute(n)
+            self.last_trace = rdd.last_trace
+            return out
         if mode == "cluster":
             from .cluster import get_pool
             if n is None:
@@ -81,9 +90,12 @@ class ParallelClosure:
             # so only the first call on a given (n, backend) pays fork +
             # connect + address brokering.
             pool = get_pool(n, backend=self._backend)
-            return pool.run(self._fn, backend=self._backend,
-                            timeout=self._timeout,
-                            segment_bytes=self._segment_bytes)
+            out = pool.run(self._fn, backend=self._backend,
+                           timeout=self._timeout,
+                           segment_bytes=self._segment_bytes,
+                           trace=self._trace)
+            self.last_trace = pool.last_trace
+            return out
         if mode != "spmd":
             raise ValueError(f"unknown mode {mode!r}")
         mesh = mesh if mesh is not None else flat_mesh(n)
@@ -109,14 +121,17 @@ class ParallelClosure:
 
 def parallelize_func(fn: Callable, *, backend: str = "native",
                      timeout: float = 60.0,
-                     segment_bytes: int | None = None) -> ParallelClosure:
+                     segment_bytes: int | None = None,
+                     trace: bool | None = None) -> ParallelClosure:
     """``sc.parallelizeFunc`` analogue. The closure takes the communicator
     as its only argument; other inputs arrive via python closure capture,
     exactly as in the paper's listings. ``segment_bytes`` tunes the
     segmented ring schedules per closure (None = $MPIGNITE_SEGMENT_BYTES,
-    <= 0 disables the automatic segmented upgrade)."""
+    <= 0 disables the automatic segmented upgrade); ``trace`` enables
+    runtime tracing for the message runtimes (None = $MPIGNITE_TRACE;
+    the resulting ``obs.JobTrace`` lands on ``closure.last_trace``)."""
     return ParallelClosure(fn, backend=backend, timeout=timeout,
-                           segment_bytes=segment_bytes)
+                           segment_bytes=segment_bytes, trace=trace)
 
 
 class MPIgniteContext:

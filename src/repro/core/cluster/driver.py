@@ -52,9 +52,13 @@ import time
 from typing import Any, Callable
 
 from ..matching import env_segment_bytes
+from ..obs.log import get_logger
+from ..obs.trace import JobTrace, trace_enabled
 from . import wire
 from .launcher import ExecutorSpec, ForkLauncher, Launcher
 from .serializer import dumps_closure
+
+_log = get_logger("cluster.driver")
 
 
 class ExecutorFailure(RuntimeError):
@@ -171,6 +175,14 @@ class ExecutorPool:
         self._conn_dead = [False] * n
         self._peer_rx_seen: dict[tuple[int, int], int] = {}
         self._data_addrs: list[tuple[str, int] | None] = [None] * n
+        #: latest heartbeat round-trip time per rank (None until the
+        #: first hb/hb_ack exchange completes)
+        self._rank_rtt: list[float | None] = [None] * n
+        #: per-job trace snapshots flushed by executors (rank -> snapshot)
+        self._trace_snaps: dict[int, dict] = {}
+        #: ``obs.JobTrace`` of the most recent *traced* run() (None
+        #: when tracing was off for that job)
+        self.last_trace: JobTrace | None = None
 
         # single-writer state for the job in flight
         self._lock = threading.Lock()
@@ -397,6 +409,17 @@ class ExecutorPool:
                 if kind == "msg":
                     self._out_qs[header["dst"]].put((header, payload))
                 elif kind == "hb":
+                    rtt = header.get("rtt")
+                    if rtt is not None:
+                        self._rank_rtt[rank] = float(rtt)
+                    try:
+                        # echo the executor's timestamp so it can measure
+                        # the control-plane round trip; a backlogged
+                        # writer just skips this RTT sample
+                        self._out_qs[rank].put_nowait(
+                            ({"kind": "hb_ack", "t": header["t"]}, b""))
+                    except queue.Full:
+                        pass
                     for src, count in (header.get("peer_rx") or {}).items():
                         # watermark per (reporter, source): another peer's
                         # higher historical count must not mask fresh
@@ -405,6 +428,13 @@ class ExecutorPool:
                         if count > self._peer_rx_seen.get(k, -1):
                             self._peer_rx_seen[k] = count
                             self._last_seen[int(src)] = time.time()
+                elif kind == "trace":
+                    # per-rank trace snapshot, flushed just before the
+                    # result frame on the same (ordered) control socket,
+                    # so it is always stored by the time run() returns
+                    with self._lock:
+                        if header.get("job") == self._cur_job:
+                            self._trace_snaps[rank] = wire.decode(payload)
                 elif kind == "result":
                     with self._lock:
                         if header.get("job") != self._cur_job:
@@ -417,8 +447,10 @@ class ExecutorPool:
                         self._done[rank] = True
                         if all(self._done):
                             self._done_event.set()
-        except (ConnectionError, OSError, ValueError):
-            pass
+        except (ConnectionError, OSError, ValueError) as e:
+            if not self.closed:
+                _log.bound(rank=rank, world=self.n).debug(
+                    "control connection lost: %s", e)
         if not self.closed:
             self._conn_dead[rank] = True
 
@@ -429,7 +461,23 @@ class ExecutorPool:
         if dead:
             self._mark_broken(dead, "executor process died between jobs")
 
+    def rank_health(self) -> list[dict]:
+        """Per-rank liveness snapshot: process/connection state, seconds
+        since the last sign of life (any control bytes, or a peer_rx
+        vouch), and the latest heartbeat round-trip time (None until the
+        first hb/hb_ack exchange completes)."""
+        now = time.time()
+        return [{"rank": r,
+                 "alive": self._handles[r].is_alive(),
+                 "conn_dead": self._conn_dead[r],
+                 "last_seen_age": max(0.0, now - self._last_seen[r]),
+                 "rtt": self._rank_rtt[r]}
+                for r in range(self.n)]
+
     def _mark_broken(self, dead: list[int], reason: str):
+        _log.bound(world=self.n).warning(
+            "marking pool broken: rank(s) %s -- %s", sorted(set(dead)),
+            reason)
         self.broken = True
         self.dead_ranks = sorted(set(self.dead_ranks) | set(dead))
         self.broken_reason = self.broken_reason or reason
@@ -448,7 +496,8 @@ class ExecutorPool:
 
     def run(self, fn: Callable, backend: str | None = None,
             timeout: float | None = None,
-            segment_bytes: int | None = None) -> list:
+            segment_bytes: int | None = None,
+            trace: bool | None = None) -> list:
         """Dispatch ``fn`` to every executor as one job; return the list
         of per-rank results (the paper: 'an array of return values from
         each process'). ``segment_bytes`` travels with the job (like
@@ -458,9 +507,12 @@ class ExecutorPool:
         always computes segmentation from one shared value -- executors
         on hosts with divergent env cannot build incompatible schedules
         (a closure can still retune via ``comm.with_segment_bytes``).
-        Raises ``ExecutorFailure`` on rank death, ``RuntimeError`` with
-        the remote traceback on a closure error, ``TimeoutError`` on a
-        deadlocked closure."""
+        ``trace`` enables per-rank runtime tracing for the job (None =
+        the driver's $MPIGNITE_TRACE); each executor flushes its event
+        buffer back on the control plane and the merged ``obs.JobTrace``
+        lands on ``self.last_trace``. Raises ``ExecutorFailure`` on rank
+        death, ``RuntimeError`` with the remote traceback on a closure
+        error, ``TimeoutError`` on a deadlocked closure."""
         with self._job_lock:
             if self.closed:
                 raise RuntimeError("pool is shut down")
@@ -483,6 +535,9 @@ class ExecutorPool:
             blob = dumps_closure(fn)
             job_timeout = self.timeout if timeout is None else timeout
             job_backend = self.backend if backend is None else backend
+            # tracing resolves at the *driver* (like segment_bytes), so
+            # one shared decision reaches every rank of the job
+            job_traced = trace_enabled() if trace is None else bool(trace)
             with self._lock:
                 self._job_seq += 1
                 job_id = self._cur_job = self._job_seq
@@ -492,10 +547,13 @@ class ExecutorPool:
                 self._done_event = threading.Event()
                 self._error_event = threading.Event()
                 done_event, error_event = self._done_event, self._error_event
+                self._trace_snaps = {}
+                self.last_trace = None
             job_seg = (env_segment_bytes() if segment_bytes is None
                        else int(segment_bytes))
             header = {"kind": "job", "job": job_id, "backend": job_backend,
-                      "timeout": job_timeout, "segment_bytes": job_seg}
+                      "timeout": job_timeout, "segment_bytes": job_seg,
+                      "trace": job_traced}
             now = time.time()
             for r in range(self.n):
                 self._last_seen[r] = now    # fresh grace period per job
@@ -529,7 +587,16 @@ class ExecutorPool:
                         "cluster closure deadlocked (implicit barrier at "
                         "closure end never reached)")
             self._raise_executor_errors()
+            if job_traced:
+                with self._lock:
+                    snaps = dict(self._trace_snaps)
+                self.last_trace = JobTrace(job_id, self.n, snaps)
             return list(self._results)
+
+    def job_trace(self) -> JobTrace | None:
+        """The merged ``obs.JobTrace`` of the most recent traced
+        ``run()`` (None when that job ran untraced)."""
+        return self.last_trace
 
     def _raise_executor_errors(self):
         # _cur_job stays put: stragglers of an errored job keep recording
@@ -674,6 +741,7 @@ class ClusterFuncRDD:
         self._bind_host = bind_host
         self._advertise_host = advertise_host
         self._secret = secret
+        self.last_trace: JobTrace | None = None
 
     def execute(self, n: int) -> list:
         pool = ExecutorPool(n, backend=self._backend, timeout=self._timeout,
@@ -685,6 +753,8 @@ class ClusterFuncRDD:
                             advertise_host=self._advertise_host,
                             secret=self._secret)
         try:
-            return pool.run(self._fn)
+            out = pool.run(self._fn)
+            self.last_trace = pool.last_trace
+            return out
         finally:
             pool.shutdown()

@@ -53,8 +53,14 @@ import traceback
 from typing import Any
 
 from ..matching import Mailbox, MessageComm, ProgressEngine
+from ..obs.log import get_logger
+from ..obs.metrics import ChannelStats
+from ..obs.trace import Tracer
 from . import wire
 from .serializer import loads_closure
+
+#: ChannelStats peer id for the driver's control connection
+DRIVER_PEER = -1
 
 
 class ExecutorChannel:
@@ -100,6 +106,17 @@ class ExecutorChannel:
         self._peer_backoff: dict[int, float] = {}
         self._rx_counts: dict[int, int] = {}    # data-plane bytes per src
         self._rx_lock = threading.Lock()
+        #: always-on wire counters (tx/rx bytes + frames, per peer;
+        #: the driver's control connection is peer -1)
+        self.stats = ChannelStats()
+        #: control-plane heartbeat round-trip time (seconds), measured
+        #: off the driver's hb_ack echo; None until the first ack lands
+        self.hb_rtt: float | None = None
+        #: per-job tracers (installed by the job loop when the job
+        #: header asks for tracing); both planes' readers consult this
+        self._tracers: dict[int, Tracer] = {}
+        self._log = get_logger("cluster.executor").bound(rank=rank)
+        self._driver_tx = lambda n: self.stats.on_tx(DRIVER_PEER, n)
         self._hb_stop = threading.Event()
         self._hb_interval = hb_interval
         self._data_server = data_server
@@ -116,9 +133,36 @@ class ExecutorChannel:
             mb = self._mailboxes.get(job)
             if mb is None:
                 mb = self._mailboxes[job] = Mailbox()
+                mb.tracer = self._tracers.get(job)
                 if self._peer_dead is not None:
                     mb.poison = self._peer_dead
             return mb
+
+    def set_tracer(self, job: int, tracer: Tracer | None) -> None:
+        """Install (or, with None, retire) a job's tracer. The mailbox
+        may already exist -- a fast peer's first msg frame creates it
+        before the local job loop sees the dispatch -- so wire it too."""
+        with self._mb_lock:
+            if tracer is None:
+                self._tracers.pop(job, None)
+            else:
+                self._tracers[job] = tracer
+            mb = self._mailboxes.get(job)
+            if mb is not None:
+                mb.tracer = tracer
+
+    def tracer_for(self, job: int) -> Tracer | None:
+        return self._tracers.get(job)
+
+    def _decode(self, payload: list[bytes] | bytes, job: int, via: str):
+        """Decode a msg payload, timed when the job is traced."""
+        tr = self._tracers.get(job)
+        if tr is None:
+            return wire.decode(payload)
+        t0 = tr.now()
+        data = wire.decode(payload)
+        tr.complete("wire.decode", "wire", t0, args={"via": via})
+        return data
 
     def engine_for(self, job: int) -> ProgressEngine:
         with self._mb_lock:
@@ -139,6 +183,8 @@ class ExecutorChannel:
         with self._mb_lock:
             for j in [j for j in self._mailboxes if j < job]:
                 del self._mailboxes[j]
+            for j in [j for j in self._tracers if j < job]:
+                del self._tracers[j]
             stale = [self._engines.pop(j) for j in list(self._engines)
                      if j < job]
         for eng in stale:       # close outside the lock: it joins a thread
@@ -166,21 +212,33 @@ class ExecutorChannel:
 
     # -- control plane ------------------------------------------------------
     def _read_loop(self):
+        nread = [0]
+
+        def on_bytes(k):
+            nread[0] += k
         try:
             while True:
-                frame = wire.recv_frame(self.sock)
+                frame = wire.recv_frame(self.sock, on_bytes=on_bytes)
                 if frame is None:
                     break
+                self.stats.on_rx(DRIVER_PEER, nread[0])
+                nread[0] = 0
                 header, payload = frame
                 kind = header.get("kind")
                 if kind == "msg":           # relay-routed delivery
-                    self.mailbox_for(header.get("job", 0)).put(
+                    job = header.get("job", 0)
+                    self.mailbox_for(job).put(
                         header["ctx"], header["tag"], header["src"],
-                        wire.decode(payload))
+                        self._decode(payload, job, "relay"))
                 elif kind == "job":
                     self.jobs.put((header["job"], header["backend"],
                                    header["timeout"],
-                                   header.get("segment_bytes"), payload))
+                                   header.get("segment_bytes"),
+                                   header.get("trace", False), payload))
+                elif kind == "hb_ack":
+                    # same clock stamped both legs (our hb's t), so this
+                    # is a true control-plane round trip
+                    self.hb_rtt = max(0.0, time.time() - header["t"])
                 elif kind == "peers":
                     self.peer_addrs = {int(r): (h, p) for r, (h, p)
                                        in header["addrs"].items()}
@@ -190,8 +248,9 @@ class ExecutorChannel:
                                           header.get("reason", ""))
                 elif kind == "ctrl" and header.get("op") == "exit":
                     break
-        except (ConnectionError, OSError):
-            pass
+        except (ConnectionError, OSError) as e:
+            if not self.exit_requested.is_set():
+                self._log.debug("control connection lost: %s", e)
         finally:
             self.exit_requested.set()
             self.jobs.put(None)
@@ -201,13 +260,16 @@ class ExecutorChannel:
             if self.exit_requested.is_set():
                 return
             hb = {"kind": "hb", "rank": self.rank, "t": time.time()}
+            if self.hb_rtt is not None:
+                hb["rtt"] = self.hb_rtt    # report the last measured RTT
             with self._rx_lock:     # peer readers insert keys concurrently
                 rx = dict(self._rx_counts)
             if rx:
                 # vouch for peers whose data this rank is receiving
                 hb["peer_rx"] = {str(s): n for s, n in rx.items()}
             try:
-                wire.send_frame(self.sock, hb, lock=self.wlock)
+                wire.send_frame(self.sock, hb, lock=self.wlock,
+                                on_tx=self._driver_tx)
             except (ConnectionError, OSError):
                 return
 
@@ -234,8 +296,10 @@ class ExecutorChannel:
         or a legacy client leading with a bare hello) is disconnected
         before any frame reaches a mailbox: fail closed."""
         src = None
+        nread = [0]
 
         def on_bytes(k):
+            nread[0] += k
             if src is not None:
                 with self._rx_lock:
                     self._rx_counts[src] = self._rx_counts.get(src, 0) + k
@@ -249,25 +313,31 @@ class ExecutorChannel:
                 return
             src = first[0]["src"]
             while True:
+                nread[0] = 0
                 frame = wire.recv_frame(conn, on_bytes=on_bytes)
                 if frame is None:
                     return
+                self.stats.on_rx(src, nread[0])
                 header, payload = frame
                 if header.get("kind") == "msg":
-                    self.mailbox_for(header.get("job", 0)).put(
+                    job = header.get("job", 0)
+                    self.mailbox_for(job).put(
                         header["ctx"], header["tag"], header["src"],
-                        wire.decode(payload))
+                        self._decode(payload, job, "direct"))
         except (ConnectionError, OSError, ValueError, TypeError,
-                AttributeError, KeyError):
-            return      # malformed peer frames end the connection, not
-            # the listener -- _accept_loop keeps serving other peers
+                AttributeError, KeyError) as e:
+            # malformed peer frames end the connection, not the
+            # listener -- _accept_loop keeps serving other peers
+            self._log.debug("peer connection from rank %s ended: %s",
+                            src, e)
+            return
         finally:
             try:
                 conn.close()
             except OSError:
                 pass
 
-    def _peer_channel(self, dst: int
+    def _peer_channel(self, dst: int, tracer: Tracer | None = None
                       ) -> tuple[socket.socket, threading.Lock] | None:
         """Lazily dial the destination's data listener (full mesh grows
         only along edges actually used). None => fall back to relay."""
@@ -283,15 +353,20 @@ class ExecutorChannel:
                 return None
             if time.monotonic() < self._peer_backoff.get(dst, 0.0):
                 return None     # recent dial failure: relay, don't block
+            t0 = 0 if tracer is None else tracer.now()
             try:
                 s = socket.create_connection(addr, timeout=10.0)
-            except OSError:
+            except OSError as e:
                 self._peer_backoff[dst] = time.monotonic() + 30.0
+                self._log.warning("peer %d dial %s failed (%s); relaying "
+                                  "via driver for 30s", dst, addr, e)
                 return None
             try:
                 transcript = wire.client_handshake(s, self.secret)
-            except wire.AuthError:
+            except wire.AuthError as e:
                 self._peer_backoff[dst] = time.monotonic() + 30.0
+                self._log.warning("peer %d handshake failed (%s); relaying "
+                                  "via driver for 30s", dst, e)
                 try:
                     s.close()
                 except OSError:
@@ -302,6 +377,9 @@ class ExecutorChannel:
             hello = {"kind": "hello", "src": self.rank}               # EAGAIN
             hello["mac"] = wire.hello_mac(self.secret, transcript, hello)
             wire.send_frame(s, hello)
+            if tracer is not None:
+                tracer.complete("peer.dial", "wire", t0,
+                                args={"dst": dst})
             got = (s, threading.Lock())
             self._peer_socks[dst] = got
             return got
@@ -323,29 +401,54 @@ class ExecutorChannel:
                  payload: Any, job: int = 0) -> None:
         header = {"kind": "msg", "dst": dst_world, "ctx": ctx,
                   "tag": tag, "src": src_world, "job": job}
+        tracer = self._tracers.get(job)
+        if self.data_plane == "direct" and dst_world == self.rank:
+            # self-send: straight to mailbox, nothing ever encoded
+            self.mailbox_for(job).put(ctx, tag, src_world, payload)
+            return
+        if tracer is None:
+            parts = wire.encode_parts(payload)
+        else:
+            t0 = tracer.now()
+            parts = wire.encode_parts(payload)
+            tracer.complete("wire.encode", "wire", t0,
+                            args={"dst": dst_world})
         if self.data_plane == "direct":
-            if dst_world == self.rank:      # self-send: straight to mailbox
-                self.mailbox_for(job).put(ctx, tag, src_world, payload)
-                return
-            peer = self._peer_channel(dst_world)
+            peer = self._peer_channel(dst_world, tracer)
             if peer is not None:
                 sock, lock = peer
                 try:
-                    wire.send_frame(sock, header, wire.encode_parts(payload),
-                                    lock=lock)
+                    wire.send_frame(sock, header, parts, lock=lock,
+                                    on_tx=lambda n: self.stats.on_tx(
+                                        dst_world, n))
                     return
-                except (ConnectionError, OSError):
+                except (ConnectionError, OSError) as e:
                     # peer gone: evict the (possibly mid-frame) stream and
                     # relay through the driver as last resort
+                    self._log.warning("peer %d send failed (%s); evicting "
+                                      "channel and relaying", dst_world, e)
                     self._evict_peer(dst_world, sock)
-        wire.send_frame(self.sock, header, wire.encode_parts(payload),
-                        lock=self.wlock)
+        wire.send_frame(self.sock, header, parts, lock=self.wlock,
+                        on_tx=self._driver_tx)
 
     def send_result(self, job_id: int, ok: bool,
                     payload: list[bytes]) -> None:
         wire.send_frame(self.sock, {"kind": "result", "rank": self.rank,
                                     "job": job_id, "ok": ok},
-                        payload, lock=self.wlock)
+                        payload, lock=self.wlock, on_tx=self._driver_tx)
+
+    def send_trace(self, job_id: int, tracer: Tracer) -> None:
+        """Flush a finished job's trace snapshot to the driver. Sent
+        *before* the result frame on the same ordered control socket, so
+        the driver has stored it by the time ``run()`` unblocks."""
+        try:
+            wire.send_frame(self.sock,
+                            {"kind": "trace", "rank": self.rank,
+                             "job": job_id},
+                            wire.encode_parts(tracer.snapshot()),
+                            lock=self.wlock, on_tx=self._driver_tx)
+        except (ConnectionError, OSError) as e:
+            self._log.debug("trace flush for job %d failed: %s", job_id, e)
 
     def close_peers(self):
         with self._peer_lock:
@@ -369,6 +472,9 @@ class ClusterComm(MessageComm):
         self._chan = channel
         self._timeout = timeout
         self._job = job     # selects the job's mailbox; survives split()
+        # per-job tracer (None = untraced); _clone() re-reads it, so
+        # split()/with_backend() communicators trace into the same buffer
+        self._obs = channel.tracer_for(job)
 
     # -- transport ----------------------------------------------------------
     def _put(self, world_dst: int, ctx: int, tag: int, src_world: int,
@@ -465,15 +571,53 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
     if data_plane == "direct" and not chan.peers_ready.wait(timeout):
         os._exit(1)
 
+    log = get_logger("cluster.executor").bound(rank=rank, world=size)
     while True:
         job = chan.jobs.get()
         if job is None or chan.exit_requested.is_set():
             break
-        job_id, job_backend, job_timeout, job_seg, blob = job
+        job_id, job_backend, job_timeout, job_seg, job_traced, blob = job
         chan.purge_mailboxes_before(job_id)
+        tracer = Tracer(rank, size, job=job_id) if job_traced else None
+        chan.set_tracer(job_id, tracer)
+
+        def flush_trace():
+            # merge the always-on runtime gauges into the trace, then
+            # ship it -- BEFORE the result frame, so the ordered control
+            # socket guarantees the driver stored it when run() returns
+            if tracer is None:
+                return
+            mb = chan.mailbox_for(job_id)
+            tracer.counters.update(
+                {f"mb.{k}": v for k, v in mb.health().items()})
+            eng = chan._engines.get(job_id)
+            if eng is not None:
+                tracer.counters.update(
+                    {f"engine.{k}": v for k, v in eng.gauges().items()})
+            s = chan.stats.summary()
+            tracer.counters.update(
+                {f"chan.{k}": v for k, v in s.items() if k != "peers"})
+            if chan.hb_rtt is not None:
+                tracer.counters["chan.hb_rtt_us"] = int(chan.hb_rtt * 1e6)
+            chan.send_trace(job_id, tracer)
+            chan.set_tracer(job_id, None)
+
         try:
-            fn = loads_closure(blob)
-        except BaseException:  # noqa: BLE001
+            if tracer is None:
+                fn = loads_closure(blob)
+            else:
+                t0 = tracer.now()
+                fn = loads_closure(blob)
+                tracer.complete("job.load", "job", t0,
+                                args={"nbytes": sum(len(b) for b in blob)
+                                      if isinstance(blob, list)
+                                      else len(blob)})
+        except BaseException:  # noqa: BLE001 -- traceback ships to the
+            # driver (which raises it); debug here avoids double-printing
+            log.bound(rank=rank, world=size, job=job_id).debug(
+                "closure deserialization failed:\n%s",
+                traceback.format_exc())
+            flush_trace()
             try:
                 chan.send_result(job_id, False,
                                  wire.encode_parts(traceback.format_exc()))
@@ -486,11 +630,21 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
                            timeout=job_timeout or timeout, job=job_id,
                            segment_bytes=job_seg)
         try:
-            result = fn(comm)
+            if tracer is None:
+                result = fn(comm)
+            else:
+                t0 = tracer.now()
+                result = fn(comm)
+                tracer.complete("job.run", "job", t0,
+                                args={"backend": comm._backend})
             chan.drain_job(job_id)      # leaked requests die with the job
+            flush_trace()
             chan.send_result(job_id, True, wire.encode_parts(result))
         except BaseException:  # noqa: BLE001 -- ship traceback, keep serving
+            log.bound(rank=rank, world=size, job=job_id).debug(
+                "closure raised:\n%s", traceback.format_exc())
             chan.drain_job(job_id)
+            flush_trace()
             try:
                 chan.send_result(job_id, False,
                                  wire.encode_parts(traceback.format_exc()))

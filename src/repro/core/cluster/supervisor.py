@@ -30,7 +30,10 @@ import time
 from typing import Any, Callable
 
 from ...train import ft
+from ..obs.log import get_logger
 from .driver import ExecutorFailure, ExecutorPool
+
+_log = get_logger("cluster.supervisor")
 
 
 @dataclasses.dataclass
@@ -117,6 +120,10 @@ class ClusterSupervisor:
     def _on_failure(self, e: ExecutorFailure) -> None:
         restart_step = self._latest_step()
         self.failures.append((restart_step, e.reason))
+        _log.warning("rank(s) %s failed (%s); restarting from step %d "
+                     "(restart %d/%d)", e.dead_ranks, e.reason,
+                     restart_step, self.state.restarts + 1,
+                     self.policy.max_restarts)
         # raises once policy.max_restarts is exhausted
         self.state.on_failure(restart_step, self.policy)
         if self.restart_delay:

@@ -299,11 +299,15 @@ def _decode_strict(data: bytes | bytearray | memoryview) -> Any:
 # ---------------------------------------------------------------------------
 
 def send_frame(sock: socket.socket, header: dict,
-               payload: bytes | list[bytes] = b"", lock=None) -> None:
+               payload: bytes | list[bytes] = b"", lock=None,
+               on_tx=None) -> None:
     """Write one frame. ``payload`` may be one bytes object or a list of
     chunks (from ``encode_parts``); each chunk gets its own sendall, so
     bulk arrays cross without ever being concatenated. ``lock``
-    serializes writers sharing a socket."""
+    serializes writers sharing a socket. ``on_tx(nbytes)`` fires once
+    per frame with the full wire size (prefix + header + payload) --
+    the tx mirror of ``recv_exact``'s ``on_bytes``; channel byte
+    counters hang off it."""
     parts = [payload] if isinstance(payload, (bytes, bytearray)) else payload
     h = json.dumps(header).encode()
     prefix = _HDR.pack(len(h), sum(len(p) for p in parts)) + h
@@ -319,6 +323,8 @@ def send_frame(sock: socket.socket, header: dict,
             write()
     else:
         write()
+    if on_tx is not None:
+        on_tx(len(prefix) + sum(len(p) for p in parts))
 
 
 def recv_exact(sock: socket.socket, n: int, on_bytes=None

@@ -38,6 +38,7 @@ from jax import lax
 
 from . import groups as G
 from .matching import Request
+from .obs.trace import process_tracer
 
 # ---------------------------------------------------------------------------
 # Cost logging
@@ -81,6 +82,16 @@ def _log(op: str, backend: str, nbytes: int, steps: int) -> None:
         log.append(G.CollectiveCost(op, backend, int(nbytes) * mult,
                                     int(steps) * mult,
                                     overlap=_COST_OVERLAP.get()))
+    tracer = process_tracer()       # None unless $MPIGNITE_TRACE is set
+    if tracer is not None:
+        # SPMD collectives are priced at trace time, not observed at run
+        # time (they live inside jit); mirror the analytic record as an
+        # instant event so a traced session shows all three modes.
+        tracer.instant(op, "spmd",
+                       {"backend": backend,
+                        "nbytes": int(nbytes) * _COST_MULT.get(),
+                        "steps": int(steps) * _COST_MULT.get(),
+                        "overlap": _COST_OVERLAP.get()})
 
 
 @contextlib.contextmanager

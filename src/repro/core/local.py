@@ -25,6 +25,7 @@ import threading
 from typing import Any, Callable
 
 from .matching import Mailbox, MessageComm, ProgressEngine
+from .obs.trace import JobTrace, Tracer, trace_enabled
 
 # Backwards-compatible alias: the mailbox used to live here.
 _Mailbox = Mailbox
@@ -32,20 +33,41 @@ _Mailbox = Mailbox
 
 class _World:
     """Shared state for one execute(): one mailbox (and one nonblocking
-    progress engine -- thread started lazily on first use) per world rank."""
+    progress engine -- thread started lazily on first use) per world rank.
+    With ``trace=True`` each rank also gets an ``obs.Tracer`` wired into
+    its mailbox and communicators."""
 
-    def __init__(self, size: int, timeout: float = 30.0):
+    def __init__(self, size: int, timeout: float = 30.0,
+                 trace: bool = False):
         self.size = size
         self.timeout = timeout
         self.mailboxes = [Mailbox() for _ in range(size)]
         self.engines = [ProgressEngine(name=f"mpignite-progress-r{r}")
                         for r in range(size)]
+        self.tracers: list[Tracer | None] = [None] * size
+        if trace:
+            self.tracers = [Tracer(r, size) for r in range(size)]
+            for mb, tr in zip(self.mailboxes, self.tracers):
+                mb.tracer = tr
 
     def close(self) -> None:
         """End-of-execute teardown: fail every leaked request and stop
-        the progress threads."""
+        the progress threads (merging final runtime gauges into the
+        tracers first, while the engines still exist)."""
+        for r, (tr, mb, eng) in enumerate(
+                zip(self.tracers, self.mailboxes, self.engines)):
+            if tr is not None:
+                tr.counters.update(
+                    {f"mb.{k}": v for k, v in mb.health().items()})
+                tr.counters.update(
+                    {f"engine.{k}": v for k, v in eng.gauges().items()})
         for eng in self.engines:
             eng.close("world torn down with the request still pending")
+
+    def job_trace(self) -> JobTrace | None:
+        if self.tracers[0] is None:
+            return None
+        return JobTrace.from_tracers(self.tracers)
 
 
 class LocalComm(MessageComm):
@@ -59,6 +81,7 @@ class LocalComm(MessageComm):
         super().__init__(group, rank_in_group, ctx, epoch, backend,
                          segment_bytes=segment_bytes)
         self._world = world
+        self._obs = world.tracers[group[rank_in_group]]
 
     # -- transport ----------------------------------------------------------
     def _put(self, world_dst: int, ctx: int, tag: int, src_world: int,
@@ -91,14 +114,20 @@ class ParallelFuncRDD:
     of return values from each process')."""
 
     def __init__(self, fn: Callable[[LocalComm], Any], timeout: float = 60.0,
-                 backend: str = "linear", segment_bytes: int | None = None):
+                 backend: str = "linear", segment_bytes: int | None = None,
+                 trace: bool | None = None):
         self._fn = fn
         self._timeout = timeout
         self._backend = backend
         self._segment_bytes = segment_bytes
+        self._trace = trace     # None = follow $MPIGNITE_TRACE
+        #: ``obs.JobTrace`` of the most recent traced ``execute`` (None
+        #: when tracing was off)
+        self.last_trace: Any = None
 
     def execute(self, n: int) -> list:
-        world = _World(n, timeout=self._timeout)
+        traced = trace_enabled() if self._trace is None else bool(self._trace)
+        world = _World(n, timeout=self._timeout, trace=traced)
         results: list[Any] = [None] * n
         errors: list[BaseException | None] = [None] * n
 
@@ -124,6 +153,7 @@ class ParallelFuncRDD:
                                        "never reached)")
         finally:
             world.close()       # leaked requests die with the world
+            self.last_trace = world.job_trace()
         for e in errors:
             if e is not None:
                 raise e

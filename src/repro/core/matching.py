@@ -39,6 +39,21 @@ from typing import Any, Callable, Generator, Sequence
 import numpy as np
 
 from . import groups as G
+from .obs.trace import current_span, set_current_span
+
+
+def payload_nbytes(data: Any) -> int:
+    """Payload size of a message body as the cost model counts it: array
+    bytes (recursing through the small tuples/lists schedules send, e.g.
+    a broadcast's ``("whole", data)`` meta); scalars/None count as zero
+    -- they carry no model-priced payload, only latency."""
+    if isinstance(data, np.ndarray):
+        return data.nbytes
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        return len(data)
+    if isinstance(data, (list, tuple)):
+        return sum(payload_nbytes(x) for x in data)
+    return 0
 
 
 class PeerDeadError(ConnectionError):
@@ -149,16 +164,18 @@ class _Waiter:
     the engine's done-callback only enqueues a token, so it is safe on a
     transport reader, and skipping the hop halves the per-step wakeup
     latency a nonblocking collective pays under CPU contention."""
-    __slots__ = ("mailbox", "key", "fut", "deadline", "claimed", "inline")
+    __slots__ = ("mailbox", "key", "fut", "deadline", "claimed", "inline",
+                 "t0")
 
     def __init__(self, mailbox: "Mailbox", key: tuple, fut: Future,
-                 deadline: float, inline: bool = False):
+                 deadline: float, inline: bool = False, t0: int = 0):
         self.mailbox = mailbox
         self.key = key
         self.fut = fut
         self.deadline = deadline
         self.claimed = False
         self.inline = inline
+        self.t0 = t0        # park time (perf_counter_ns); 0 when untraced
 
     def expire(self) -> None:
         with self.mailbox.lock:
@@ -248,7 +265,14 @@ class Mailbox:
     buffer messages on the receiving worker'). Messages are indexed by
     their full ``(ctx, tag, src)`` match key -- put/get are O(1) dict
     operations, not a scan of every buffered message -- with a deque per
-    key preserving arrival order for same-key messages."""
+    key preserving arrival order for same-key messages.
+
+    Health counters (``depth``/``peak_depth``/``total_matched``/
+    ``poisoned_waiters``) are always-on: integer adds under the lock the
+    operation already holds, exposed so operators can see queue pressure
+    without enabling tracing. ``tracer`` is the optional per-rank event
+    recorder; every trace hook guards on it being non-None so the
+    disabled path costs one pointer compare."""
     lock: threading.Lock = field(default_factory=threading.Lock)
     cond: threading.Condition = None  # type: ignore[assignment]
     queues: dict[tuple[int, int, int], deque] = field(default_factory=dict)
@@ -256,6 +280,23 @@ class Mailbox:
     #: non-None once the failure detector declared a peer dead: every
     #: receive that would block raises PeerDeadError(poison) instead.
     poison: str | None = None
+    #: messages currently buffered (arrived, not yet matched)
+    depth: int = 0
+    #: high-water mark of ``depth`` over the mailbox's lifetime
+    peak_depth: int = 0
+    #: receives satisfied (buffered hit, blocking wake, or waiter fire)
+    total_matched: int = 0
+    #: async waiters failed by ``poison_all``
+    poisoned_waiters: int = 0
+    #: per-rank ``obs.Tracer`` when tracing is enabled, else None
+    tracer: Any = None
+
+    def health(self) -> dict:
+        with self.lock:
+            return {"depth": self.depth, "peak_depth": self.peak_depth,
+                    "total_matched": self.total_matched,
+                    "poisoned_waiters": self.poisoned_waiters,
+                    "waiting": sum(len(dq) for dq in self.waiters.values())}
 
     def __post_init__(self):
         self.cond = threading.Condition(self.lock)
@@ -273,8 +314,12 @@ class Mailbox:
                       if not w.claimed]
             for w in doomed:
                 w.claimed = True
+            self.poisoned_waiters += len(doomed)
             self.waiters.clear()
             self.cond.notify_all()
+        if self.tracer is not None:
+            self.tracer.instant("mb.poison", "mb",
+                                {"reason": reason, "waiters": len(doomed)})
         for w in doomed:
             _deliver_pool().submit(w.fut.set_exception, PeerDeadError(reason))
 
@@ -293,8 +338,17 @@ class Mailbox:
                     break
             if deliver is None:
                 self.queues.setdefault(key, deque()).append(payload)
+                self.depth += 1
+                if self.depth > self.peak_depth:
+                    self.peak_depth = self.depth
                 self.cond.notify_all()
+            else:
+                self.total_matched += 1
         if deliver is not None:
+            if self.tracer is not None and deliver.t0:
+                # park -> wake latency of the satisfied async waiter
+                self.tracer.complete("mb.wake", "mb", deliver.t0,
+                                     args={"tag": tag, "src": src})
             if deliver.inline:      # engine waiter: callback just enqueues
                 deliver.fut.set_result(payload)
             else:
@@ -308,6 +362,7 @@ class Mailbox:
         # absolute deadline: unrelated arrivals wake the condition, and a
         # per-wait timeout would restart the clock on every one of them
         deadline = time.monotonic() + timeout
+        t0 = 0
         with self.lock:
             while True:
                 q = self.queues.get(key)
@@ -315,9 +370,16 @@ class Mailbox:
                     payload = q.popleft()
                     if not q:
                         del self.queues[key]
+                    self.depth -= 1
+                    self.total_matched += 1
+                    if t0:      # only when this receive actually blocked
+                        self.tracer.complete("mb.wait", "mb", t0,
+                                             args={"tag": tag, "src": src})
                     return payload
                 if self.poison is not None:
                     raise PeerDeadError(self.poison)
+                if not t0 and self.tracer is not None:
+                    t0 = time.perf_counter_ns()
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self.cond.wait(timeout=remaining):
                     raise TimeoutError(
@@ -340,12 +402,16 @@ class Mailbox:
                 payload = q.popleft()
                 if not q:
                     del self.queues[key]
+                self.depth -= 1
+                self.total_matched += 1
             elif self.poison is not None:
                 fut.set_exception(PeerDeadError(self.poison))
                 return fut
             else:
                 w = _Waiter(self, key, fut,
-                            time.monotonic() + timeout, inline=inline)
+                            time.monotonic() + timeout, inline=inline,
+                            t0=(time.perf_counter_ns()
+                                if self.tracer is not None else 0))
                 self.waiters.setdefault(key, deque()).append(w)
                 _Expiry.instance().add(w)
                 fut.mpignite_waiter = w     # cancel hook for Request
@@ -462,16 +528,22 @@ def waitany(requests: Sequence[Request],
 class _Schedule:
     """One in-flight nonblocking collective: a resumable generator plus
     the Future its Request exposes. The generator performs its sends
-    inline and yields ``(ctx, tag, src_world)`` for every receive."""
-    __slots__ = ("gen", "fut", "mailbox", "timeout", "cancelled")
+    inline and yields ``(ctx, tag, src_world)`` for every receive.
+    ``span``/``tracer`` (set only when tracing) let the engine attribute
+    sent bytes to the right collective while schedules interleave on its
+    thread, and close the span at retirement."""
+    __slots__ = ("gen", "fut", "mailbox", "timeout", "cancelled", "span",
+                 "tracer")
 
     def __init__(self, gen: Generator, fut: Future, mailbox: Mailbox,
-                 timeout: float):
+                 timeout: float, span=None, tracer=None):
         self.gen = gen
         self.fut = fut
         self.mailbox = mailbox
         self.timeout = timeout
         self.cancelled = False
+        self.span = span
+        self.tracer = tracer
 
 
 class ProgressEngine:
@@ -496,21 +568,45 @@ class ProgressEngine:
         self._thread: threading.Thread | None = None
         self._pending: set[_Schedule] = set()
         self._closed = False
+        # always-on gauges (plain int adds; read by obs and tests)
+        self.submitted = 0
+        self.completed = 0
+        self.wakeups = 0
+        self.peak_pending = 0
 
     @property
     def pending_count(self) -> int:
         with self._lock:
             return len(self._pending)
 
+    @property
+    def thread_alive(self) -> bool:
+        with self._lock:
+            return self._thread is not None and self._thread.is_alive()
+
+    def gauges(self) -> dict:
+        with self._lock:
+            return {"submitted": self.submitted, "completed": self.completed,
+                    "wakeups": self.wakeups, "pending": len(self._pending),
+                    "peak_pending": self.peak_pending,
+                    "thread_alive": (self._thread is not None
+                                     and self._thread.is_alive())}
+
     def submit(self, gen: Generator, mailbox: Mailbox, timeout: float,
-               op: str = "") -> Request:
+               op: str = "", span=None, tracer=None) -> Request:
         fut: Future = Future()
         fut.set_running_or_notify_cancel()
-        sched = _Schedule(gen, fut, mailbox, timeout)
+        sched = _Schedule(gen, fut, mailbox, timeout, span=span,
+                          tracer=tracer)
         with self._lock:
             if self._closed:
                 raise RuntimeError(f"progress engine {self._name} is closed")
             self._pending.add(sched)
+            self.submitted += 1
+            if len(self._pending) > self.peak_pending:
+                self.peak_pending = len(self._pending)
+            if tracer is not None:
+                tracer.counter("engine.pending", len(self._pending))
             if self._thread is None or not self._thread.is_alive():
                 self._thread = threading.Thread(target=self._run, daemon=True,
                                                 name=self._name)
@@ -535,43 +631,58 @@ class ProgressEngine:
 
     def _advance(self, sched: _Schedule, value: Any,
                  exc: BaseException | None) -> None:
+        self.wakeups += 1       # engine thread only; no lock needed
         if sched.fut.done():        # cancelled or drained while parked
-            self._retire(sched)
+            self._retire(sched, error="cancelled")
             sched.gen.close()
             return
+        span = sched.span
+        if span is not None:    # attribute this resume's sends to its coll
+            prev_span = set_current_span(span)
         try:
-            if exc is not None:
-                op = sched.gen.throw(exc)
-            else:
-                op = sched.gen.send(value)
-        except StopIteration as s:
-            self._retire(sched)
             try:
-                sched.fut.set_result(s.value)
-            except _futures.InvalidStateError:
-                pass        # drained/cancelled concurrently
-        except BaseException as e:  # noqa: BLE001 -- user reduce fn may raise
-            self._retire(sched)
-            try:
-                sched.fut.set_exception(e)
-            except _futures.InvalidStateError:
-                pass
-        else:
-            ctx, tag, src = op
-            rfut = sched.mailbox.get_async(ctx, tag, src, sched.timeout,
-                                           inline=True)
-
-            def arrived(f: Future, sched=sched) -> None:
-                e = f.exception()
-                if e is not None:
-                    self._q.put((sched, None, e))
+                if exc is not None:
+                    op = sched.gen.throw(exc)
                 else:
-                    self._q.put((sched, f.result(), None))
-            rfut.add_done_callback(arrived)
+                    op = sched.gen.send(value)
+            except StopIteration as s:
+                self._retire(sched)
+                try:
+                    sched.fut.set_result(s.value)
+                except _futures.InvalidStateError:
+                    pass        # drained/cancelled concurrently
+            except BaseException as e:  # noqa: BLE001 -- user fn may raise
+                self._retire(sched, error=repr(e))
+                try:
+                    sched.fut.set_exception(e)
+                except _futures.InvalidStateError:
+                    pass
+            else:
+                ctx, tag, src = op
+                rfut = sched.mailbox.get_async(ctx, tag, src, sched.timeout,
+                                               inline=True)
 
-    def _retire(self, sched: _Schedule) -> None:
+                def arrived(f: Future, sched=sched) -> None:
+                    e = f.exception()
+                    if e is not None:
+                        self._q.put((sched, None, e))
+                    else:
+                        self._q.put((sched, f.result(), None))
+                rfut.add_done_callback(arrived)
+        finally:
+            if span is not None:
+                set_current_span(prev_span)
+
+    def _retire(self, sched: _Schedule, error: str | None = None) -> None:
         with self._lock:
             self._pending.discard(sched)
+            self.completed += 1
+            pending = len(self._pending)
+        if sched.tracer is not None:
+            if sched.span is not None:
+                sched.tracer.coll_end(sched.span, error=error)
+                sched.span = None       # close exactly once
+            sched.tracer.counter("engine.pending", pending)
 
     def drain(self, reason: str = "progress engine drained with the "
                                   "request still pending") -> int:
@@ -582,9 +693,13 @@ class ProgressEngine:
         with self._lock:
             doomed = list(self._pending)
             self._pending.clear()
+            self.completed += len(doomed)
         n = 0
         for sched in doomed:
             sched.cancelled = True
+            if sched.tracer is not None and sched.span is not None:
+                sched.tracer.coll_end(sched.span, error="drained")
+                sched.span = None
             try:
                 sched.fut.set_exception(PeerDeadError(reason))
                 n += 1
@@ -623,6 +738,11 @@ class MessageComm:
     """Base communicator: the full MPIgnite API composed from matched
     point-to-point messages (paper's ``SparkComm``). Method names keep the
     paper's spelling alongside pythonic aliases."""
+
+    #: per-rank ``obs.Tracer`` when tracing is enabled. Class attribute so
+    #: every instance reads None for free; transports overwrite it on the
+    #: instance when a traced job runs. All instrumentation guards on it.
+    _obs = None
 
     def __init__(self, group: tuple[int, ...], rank_in_group: int, ctx: int,
                  epoch: tuple = (), backend: str = "linear",
@@ -804,6 +924,10 @@ class MessageComm:
         return (*self._epoch, self._ctx, self._calls.next())
 
     def _send_coll(self, dst: int, tag: int, key: tuple, data: Any) -> None:
+        if self._obs is not None:
+            span = current_span()
+            if span is not None:    # bytes belong to the advancing coll
+                span.add(payload_nbytes(data))
         self._put(self._group[dst], stable_ctx(self._ctx, tag, key), tag,
                   self._group[self._rank], data)
 
@@ -822,18 +946,47 @@ class MessageComm:
         ``(*key, phase, s)`` -- one half of the segmented wire protocol
         (``_recv_segments`` is the other; both ends derive identical
         ``spans`` from pure math, so the subkeys line up)."""
+        if self._obs is None:
+            for s, (a, b) in enumerate(spans):
+                self._send_coll(dst, tag, (*key, phase, s), flat[a:b])
+            return
+        t0 = time.perf_counter_ns()
         for s, (a, b) in enumerate(spans):
             self._send_coll(dst, tag, (*key, phase, s), flat[a:b])
+        if spans:
+            self._seg_span("seg.send", t0,
+                           {"phase": str(phase), "nseg": len(spans)})
 
     def _recv_segments(self, src: int, tag: int, key: tuple, phase: Any,
                        nseg: int):
         """Yield the ``nseg`` receive descriptors matching a
         ``_send_segments`` call; returns the received pieces in order
         (drive with ``yield from``)."""
+        if self._obs is None:
+            parts = []
+            for s in range(nseg):
+                parts.append((yield self._recv_op(src, tag,
+                                                  (*key, phase, s))))
+            return parts
+        t0 = time.perf_counter_ns()
         parts = []
         for s in range(nseg):
             parts.append((yield self._recv_op(src, tag, (*key, phase, s))))
+        self._seg_span("seg.recv", t0, {"phase": str(phase), "nseg": nseg})
         return parts
+
+    def _seg_span(self, name: str, t0: int, args: dict) -> None:
+        """Record a segment-phase span on the owning collective's track
+        (so Perfetto nests it under the collective). Caller has already
+        checked ``self._obs is not None``. Also retags the owning span's
+        backend as ``segmented``: the span must report the schedule that
+        actually ran, not the ``ring`` the caller asked for -- the byte
+        cross-check prices the two differently."""
+        span = current_span()
+        if span is not None:
+            span.backend = "segmented"
+        self._obs.complete(name, "seg", t0, args=args,
+                           tid=span.tid if span is not None else None)
 
     def _run_sched(self, gen) -> Any:
         """Drive a schedule generator to completion with blocking
@@ -844,6 +997,26 @@ class MessageComm:
                 op = gen.send(self._get(*op))
         except StopIteration as s:
             return s.value
+
+    def _run_coll(self, gen, op: str, data: Any = None) -> Any:
+        """Blocking-collective entry: ``_run_sched`` plus, when traced, a
+        collective span installed as this thread's current span so the
+        schedule's sends attribute their bytes to it."""
+        obs = self._obs
+        if obs is None:
+            return self._run_sched(gen)
+        span = obs.coll_begin(op, self._backend, len(self._group),
+                              payload_nbytes(data))
+        prev = set_current_span(span)
+        try:
+            result = self._run_sched(gen)
+        except BaseException as e:
+            obs.coll_end(span, error=repr(e))
+            raise
+        finally:
+            set_current_span(prev)
+        obs.coll_end(span)
+        return result
 
     def _barrier_sched(self, tag: int, key: tuple):
         p = len(self._group)
@@ -976,9 +1149,13 @@ class MessageComm:
                 cur = chunks[recv_idx]
                 pieces = yield from self._recv_segments(
                     left, tag, key, ("rs", step), len(spans))
+                tf = time.perf_counter_ns() if self._obs is not None else 0
                 chunks[recv_idx] = _cat(
                     [f(cur[a:b], piece)
                      for (a, b), piece in zip(spans, pieces)])
+                if tf:
+                    self._seg_span("seg.fold", tf,
+                                   {"step": step, "nseg": len(spans)})
         # all-gather: circulate the reduced chunks; receive chunk c this
         # step, forward it the next.
         for step in range(p - 1):
@@ -1115,12 +1292,14 @@ class MessageComm:
     def barrier(self) -> None:
         """Message-realized barrier: gather a token at rank 0, then release
         everyone (works over any transport, unlike threading.Barrier)."""
-        return self._run_sched(self._barrier_sched(-10, self._next_key()))
+        return self._run_coll(self._barrier_sched(-10, self._next_key()),
+                              "barrier")
 
     def broadcast(self, root: int, data: Any = None) -> Any:
         """comm.broadcast[T](root, data): only the root's payload matters."""
-        return self._run_sched(
-            self._broadcast_sched(root, data, -2, self._next_key()))
+        return self._run_coll(
+            self._broadcast_sched(root, data, -2, self._next_key()),
+            "broadcast", data)
 
     def allreduce(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
         """comm.allReduce[T](data, f) with an arbitrary reduction function
@@ -1131,12 +1310,14 @@ class MessageComm:
         ring (phase-2): circulate values around the ring, each rank folding
         as they arrive -- ``f`` must be associative and commutative (same
         restriction as the SPMD ring backend)."""
-        return self._run_sched(
-            self._allreduce_sched(data, f, -3, self._next_key()))
+        return self._run_coll(
+            self._allreduce_sched(data, f, -3, self._next_key()),
+            "allreduce", data)
 
     def allgather(self, data: Any) -> list:
-        return self._run_sched(
-            self._allgather_sched(data, -4, self._next_key()))
+        return self._run_coll(
+            self._allgather_sched(data, -4, self._next_key()),
+            "allgather", data)
 
     # -- nonblocking API (MPI-3 shape): Request-returning twins -------------
     def _progress_engine(self) -> ProgressEngine:
@@ -1150,14 +1331,22 @@ class MessageComm:
                 name=f"mpignite-progress-r{self._rank}")
         return eng
 
-    def _submit_sched(self, gen, op: str) -> Request:
+    def _submit_sched(self, gen, op: str, data: Any = None) -> Request:
         mb = self._async_mailbox()
         if mb is None:
             raise NotImplementedError(
                 "nonblocking collectives need a mailbox-backed transport "
                 "(LocalComm / ClusterComm); this transport has none")
         mailbox, timeout = mb
-        return self._progress_engine().submit(gen, mailbox, timeout, op=op)
+        obs = self._obs
+        span = None
+        if obs is not None:
+            # overlap=True gives the span its own synthetic track, so
+            # concurrently outstanding collectives render side by side
+            span = obs.coll_begin(op, self._backend, len(self._group),
+                                  payload_nbytes(data), overlap=True)
+        return self._progress_engine().submit(gen, mailbox, timeout, op=op,
+                                              span=span, tracer=obs)
 
     def isend(self, dst: int, tag: int, data: Any) -> Request:
         """MPI_Isend. MPIgnite sends are always nonblocking and buffered
@@ -1188,7 +1377,7 @@ class MessageComm:
         """Nonblocking broadcast; ``wait`` returns the root's payload."""
         return self._submit_sched(
             self._broadcast_sched(root, data, -2, self._next_key()),
-            op="ibcast")
+            op="ibcast", data=data)
 
     ibroadcast = ibcast
 
@@ -1198,13 +1387,13 @@ class MessageComm:
         primitive (``wait`` returns the reduced value)."""
         return self._submit_sched(
             self._allreduce_sched(data, f, -3, self._next_key()),
-            op="iallreduce")
+            op="iallreduce", data=data)
 
     def iallgather(self, data: Any) -> Request:
         """Nonblocking allgather; ``wait`` returns the rank-ordered list."""
         return self._submit_sched(
             self._allgather_sched(data, -4, self._next_key()),
-            op="iallgather")
+            op="iallgather", data=data)
 
     def ireduce(self, root: int, data: Any,
                 f: Callable[[Any, Any], Any]) -> Request:
@@ -1212,14 +1401,14 @@ class MessageComm:
         None elsewhere."""
         return self._submit_sched(
             self._reduce_sched(root, data, f, -7, self._next_key()),
-            op="ireduce")
+            op="ireduce", data=data)
 
     def igather(self, root: int, data: Any) -> Request:
         """Nonblocking gather; ``wait`` returns the rank-ordered list at
         ``root`` and None elsewhere."""
         return self._submit_sched(
             self._gather_sched(root, data, -8, self._next_key()),
-            op="igather")
+            op="igather", data=data)
 
     def iscatter(self, root: int, items: Sequence[Any] | None = None
                  ) -> Request:
@@ -1228,13 +1417,13 @@ class MessageComm:
             self._require_per_rank(items, "iscatter")
         return self._submit_sched(
             self._scatter_sched(root, items, -11, self._next_key()),
-            op="iscatter")
+            op="iscatter", data=items)
 
     def iscan(self, data: Any, f: Callable[[Any, Any], Any]) -> Request:
         """Nonblocking inclusive prefix reduction."""
         return self._submit_sched(
             self._scan_sched(data, f, -9, self._next_key()),
-            op="iscan")
+            op="iscan", data=data)
 
     def ialltoall(self, chunks: Sequence[Any]) -> Request:
         """Nonblocking alltoall; ``wait`` returns the source-ordered
@@ -1242,32 +1431,35 @@ class MessageComm:
         self._require_per_rank(chunks, "ialltoall")
         return self._submit_sched(
             self._alltoall_sched(chunks, -5, self._next_key()),
-            op="ialltoall")
+            op="ialltoall", data=chunks)
 
     def ireducescatter(self, chunks: Sequence[Any], f: Callable) -> Request:
         """Nonblocking reducescatter; ``wait`` returns this rank's fold."""
         self._require_per_rank(chunks, "ireducescatter")
         return self._submit_sched(
             self._reducescatter_sched(chunks, f, -12, self._next_key()),
-            op="ireducescatter")
+            op="ireducescatter", data=chunks)
 
     def reducescatter(self, chunks: Sequence[Any], f: Callable) -> Any:
         """Each rank contributes a list of P chunks; rank i gets the f-fold
         of everyone's chunk i."""
         self._require_per_rank(chunks, "reducescatter")
-        return self._run_sched(
-            self._reducescatter_sched(chunks, f, -12, self._next_key()))
+        return self._run_coll(
+            self._reducescatter_sched(chunks, f, -12, self._next_key()),
+            "reducescatter", chunks)
 
     def reduce(self, root: int, data: Any, f: Callable[[Any, Any], Any]) -> Any:
         """MPI_Reduce: fold everyone's data at ``root`` (None elsewhere).
         One of the 'more methods' the paper's section 6 plans."""
-        return self._run_sched(
-            self._reduce_sched(root, data, f, -7, self._next_key()))
+        return self._run_coll(
+            self._reduce_sched(root, data, f, -7, self._next_key()),
+            "reduce", data)
 
     def gather(self, root: int, data: Any) -> list | None:
         """MPI_Gather: rank-ordered list at ``root`` (None elsewhere)."""
-        return self._run_sched(
-            self._gather_sched(root, data, -8, self._next_key()))
+        return self._run_coll(
+            self._gather_sched(root, data, -8, self._next_key()),
+            "gather", data)
 
     def scatter(self, root: int, items: Sequence[Any] | None = None) -> Any:
         """MPI_Scatter: the root's ``items`` list (one per rank) is fanned
@@ -1277,19 +1469,22 @@ class MessageComm:
         asymmetric by nature)."""
         if self._rank == root:
             self._require_per_rank(items, "scatter")
-        return self._run_sched(
-            self._scatter_sched(root, items, -11, self._next_key()))
+        return self._run_coll(
+            self._scatter_sched(root, items, -11, self._next_key()),
+            "scatter", items)
 
     def scan(self, data: Any, f: Callable[[Any, Any], Any]) -> Any:
         """MPI_Scan: inclusive prefix reduction -- rank r receives
         f(x_0, ..., x_r). Linear chain through the ranks."""
-        return self._run_sched(
-            self._scan_sched(data, f, -9, self._next_key()))
+        return self._run_coll(
+            self._scan_sched(data, f, -9, self._next_key()),
+            "scan", data)
 
     def alltoall(self, chunks: Sequence[Any]) -> list:
         self._require_per_rank(chunks, "alltoall")
-        return self._run_sched(
-            self._alltoall_sched(chunks, -5, self._next_key()))
+        return self._run_coll(
+            self._alltoall_sched(chunks, -5, self._next_key()),
+            "alltoall", chunks)
 
     # -- split (paper section 3.1: ranks send (global rank, key, color) to the
     #    lowest participating rank; it groups by color, sorts by key, and

@@ -1,0 +1,113 @@
+"""Structured rank-tagged logging for the runtime.
+
+``$MPIGNITE_LOG`` selects the level (``debug``/``info``/``warning``/
+``error``; unset means ``warning`` so a quiet run stays quiet). Every
+line carries a ``[rank R/N job J]`` prefix when the emitting component
+knows its coordinates, so executor-side failures are attributable to a
+rank instead of vanishing into a silent ``except`` clause.
+
+Built on stdlib :mod:`logging` (one ``mpignite`` logger hierarchy, a
+single stderr handler installed lazily) so embedders can reroute it with
+ordinary logging config; the helpers here only add the rank tagging.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+import threading
+
+LOG_ENV = "MPIGNITE_LOG"
+
+_LEVELS = {"debug": logging.DEBUG, "info": logging.INFO,
+           "warning": logging.WARNING, "warn": logging.WARNING,
+           "error": logging.ERROR, "critical": logging.CRITICAL,
+           "off": logging.CRITICAL + 10, "none": logging.CRITICAL + 10}
+
+_configured = False
+_lock = threading.Lock()
+
+
+def env_level() -> int:
+    raw = os.environ.get(LOG_ENV, "").strip().lower()
+    if not raw:
+        return logging.WARNING
+    if raw in _LEVELS:
+        return _LEVELS[raw]
+    try:
+        return int(raw)
+    except ValueError:
+        return logging.WARNING
+
+
+def _configure() -> None:
+    global _configured
+    with _lock:
+        if _configured:
+            return
+        root = logging.getLogger("mpignite")
+        root.setLevel(env_level())
+        if not root.handlers:
+            h = logging.StreamHandler(sys.stderr)
+            h.setFormatter(logging.Formatter(
+                "%(asctime)s %(levelname).1s %(name)s %(message)s",
+                datefmt="%H:%M:%S"))
+            root.addHandler(h)
+        root.propagate = False
+        _configured = True
+
+
+def get_logger(component: str) -> "RankLogger":
+    """A rank-taggable logger for one runtime component, e.g.
+    ``get_logger("cluster.executor")``."""
+    _configure()
+    return RankLogger(logging.getLogger(f"mpignite.{component}"))
+
+
+def reconfigure() -> None:
+    """Test hook: re-read ``$MPIGNITE_LOG``."""
+    global _configured
+    with _lock:
+        _configured = False
+    _configure()
+
+
+class RankLogger:
+    """Thin wrapper adding ``[rank R/N job J]`` prefixes. Bind
+    coordinates once with :meth:`bound` and log freely after; unbound
+    loggers emit untagged lines (driver side)."""
+
+    __slots__ = ("_log", "_prefix")
+
+    def __init__(self, log: logging.Logger, prefix: str = ""):
+        self._log = log
+        self._prefix = prefix
+
+    def bound(self, rank: int | None = None, world: int | None = None,
+              job: int | None = None) -> "RankLogger":
+        parts = []
+        if rank is not None:
+            parts.append(f"rank {rank}/{world}" if world is not None
+                         else f"rank {rank}")
+        if job is not None:
+            parts.append(f"job {job}")
+        prefix = f"[{' '.join(parts)}] " if parts else ""
+        return RankLogger(self._log, prefix)
+
+    def isEnabledFor(self, level: int) -> bool:
+        return self._log.isEnabledFor(level)
+
+    def debug(self, msg: str, *args) -> None:
+        self._log.debug(self._prefix + msg, *args)
+
+    def info(self, msg: str, *args) -> None:
+        self._log.info(self._prefix + msg, *args)
+
+    def warning(self, msg: str, *args) -> None:
+        self._log.warning(self._prefix + msg, *args)
+
+    def error(self, msg: str, *args) -> None:
+        self._log.error(self._prefix + msg, *args)
+
+    def exception(self, msg: str, *args) -> None:
+        self._log.error(self._prefix + msg, *args, exc_info=True)
