@@ -15,10 +15,12 @@
                    broker peer addresses, dispatch jobs, detect failure;
                    ``ClusterFuncRDD`` cold-start wrapper; ``get_pool``
                    warm-pool cache
-- ``supervisor`` : failure-triggered checkpoint-restart recovery
-                   (``ClusterSupervisor``), degrading to the phase-1
-                   ``linear`` backend per ``train.ft.RecoveryPolicy``,
-                   relaunching through the configured launcher
+- ``supervisor`` : elastic recovery (``ClusterSupervisor``) --
+                   shrink-to-survivors without relaunch, grow-on-join at
+                   step boundaries, proactive suspicion off heartbeat
+                   staleness, checkpoint-restart relaunch as the
+                   fallback -- degrading to the phase-1 ``linear``
+                   backend per ``train.ft.RecoveryPolicy``
 """
 from . import wire
 from .driver import (ClusterFuncRDD, ClusterPool, ExecutorFailure,

@@ -70,6 +70,28 @@ class ExecutorFailure(RuntimeError):
         super().__init__(f"executor rank(s) {dead_ranks} failed: {reason}")
 
 
+class _ExternalHandle:
+    """Handle for a rank that joined from outside any launcher (a
+    grow-on-join dial): liveness is judged by its control connection and
+    heartbeats alone, and teardown is the ``ctrl``/``exit`` frame -- the
+    driver has no process to signal."""
+
+    def __init__(self, pid: int | None):
+        self.pid = pid
+
+    def is_alive(self) -> bool:
+        return True
+
+    def terminate(self) -> None:
+        pass
+
+    def join(self, timeout: float | None = None) -> None:
+        pass
+
+    def exit_code(self) -> int | None:
+        return None
+
+
 class ExecutorPool:
     """A persistent world of n executor processes accepting dispatched
     jobs. Usable as a context manager (``ClusterPool`` is the exported
@@ -82,6 +104,15 @@ class ExecutorPool:
     ``backend`` is the *default* collective algorithm (``linear`` |
     ``ring`` | ``native``); each ``run`` may override it, because the
     algorithm is a property of the job, not of the transport.
+
+    Membership is *elastic*: every executor ever launched owns a stable
+    **slot** (its launch rank -- the index of the per-rank arrays
+    below), while the **world** is the ordered list of live slots. A
+    ``shrink_to_survivors()`` after a failure, or an
+    ``absorb_joiners()`` at a step boundary, renumbers world ranks and
+    re-brokers peer addresses under a bumped ``membership_epoch``; jobs
+    always dispatch with the world view of their epoch, so no process
+    relaunch is needed to keep computing on the survivors.
     """
 
     def __init__(self, n: int, backend: str = "linear",
@@ -134,6 +165,18 @@ class ExecutorPool:
         # below deliberately does NOT forward pool advertise_host.
         dial_host = advertise_host or (
             "127.0.0.1" if bind_host in ("0.0.0.0", "::", "") else bind_host)
+        self._dial_addr = (dial_host, port)     # what joiners dial too
+
+        #: live slots in world-rank order; ``n`` counts slots ever
+        #: launched (the per-slot arrays index it), ``world`` is the
+        #: current membership
+        self._world: list[int] = list(range(n))
+        self._wrank: dict[int, int] = {s: s for s in range(n)}
+        self.membership_epoch = 0
+        #: authenticated grow-on-join dials parked until absorb_joiners()
+        self._pending_joins: list[tuple[socket.socket, dict]] = []
+        #: handles of spawn_joiner() processes not yet absorbed
+        self._join_handles: list = []
 
         if self.launcher.needs_secret_file:
             fd, self._secret_path = tempfile.mkstemp(prefix="mpignite-",
@@ -255,11 +298,7 @@ class ExecutorPool:
             # broker the data-plane address exchange before any job
             # runs, using the addresses each executor *advertised*
             if data_plane == "direct":
-                addrs = {str(r): list(self._data_addrs[r])
-                         for r in range(n)}
-                for r in range(n):
-                    self._out_qs[r].put(({"kind": "peers",
-                                          "addrs": addrs}, b""))
+                self._broker_peers()
 
             for t in self._routers:
                 t.start()
@@ -321,25 +360,235 @@ class ExecutorPool:
                 pass
 
     def _reject_loop(self):
-        """Post-bootstrap acceptor: the world is complete, so *every*
-        later dial is rogue. Run the handshake (so a wrong-secret dialer
-        learns nothing but a refusal) and close."""
+        """Post-bootstrap acceptor. The launched world is complete, so a
+        dial claiming a rank is rogue -- but an authenticated dial whose
+        hello says ``join`` is a grow-on-join candidate: it is parked in
+        ``_pending_joins`` (no world membership, no heartbeat watch)
+        until ``absorb_joiners()`` admits it at a step boundary. Every
+        other dial runs the handshake (so a wrong-secret dialer learns
+        nothing but a refusal) and is closed."""
         while True:
             try:
                 conn, _ = self._server.accept()
             except OSError:
                 return                  # server closed: pool shut down
+            threading.Thread(target=self._postboot_admit, args=(conn,),
+                             daemon=True).start()
+
+    def _postboot_admit(self, conn: socket.socket) -> None:
+        try:
+            transcript = wire.server_handshake(conn, self.secret,
+                                               timeout=5.0)
+            conn.settimeout(5.0)
+            frame = wire.recv_frame(conn, limit=wire.PREAUTH_MAX_FRAME)
+            conn.settimeout(None)
+            if frame is None or frame[0].get("kind") != "hello":
+                raise wire.AuthError("no hello after handshake")
+            header = frame[0]
+            if not wire.verify_hello(self.secret, transcript, header):
+                raise wire.AuthError("hello MAC invalid (replay?)")
+            if not header.get("join"):
+                raise wire.AuthError("world is complete; only join "
+                                     "hellos are admitted")
+            if self.data_plane == "direct" and not header.get("data_addr"):
+                raise wire.AuthError("joiner advertised no data_addr "
+                                     "for the direct data plane")
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._admit_lock:
+                if self.closed:
+                    raise wire.AuthError("pool is shut down")
+                self._pending_joins.append((conn, header))
+                self.frame_counts["hello"] += 1
+            _log.bound(world=len(self._world)).info(
+                "parked join dial (pid %s); %d pending",
+                header.get("pid"), len(self._pending_joins))
+        except (wire.AuthError, ConnectionError, OSError, ValueError,
+                KeyError, TypeError, AttributeError, IndexError):
             with self._admit_lock:
                 self.rejected_dials += 1
             try:
-                wire.server_handshake(conn, self.secret, timeout=5.0)
-            except Exception:   # noqa: BLE001 -- the lifetime guarantee:
-                pass            # no dial, however malformed, may kill
-            finally:            # this thread
+                conn.close()
+            except OSError:
+                pass
+
+    # -- elastic membership -------------------------------------------------
+    @property
+    def size(self) -> int:
+        """Current world size (may differ from ``n``, the slots ever
+        launched, after a shrink or grow)."""
+        return len(self._world)
+
+    @property
+    def world(self) -> list[int]:
+        """Live slots in world-rank order: ``world[w]`` is the slot
+        (stable launch identity) of world rank ``w``."""
+        return list(self._world)
+
+    def _broker_peers(self) -> None:
+        """(Re-)send the peers frame to every world member: data-plane
+        addresses keyed by *world rank* for the current membership
+        epoch. Executors receiving a bumped epoch evict their peer
+        channels (the rank->address mapping changed meaning) and clear
+        any peer-death poison -- the new world is healthy."""
+        addrs = {}
+        if self.data_plane == "direct":
+            addrs = {str(w): list(self._data_addrs[s])
+                     for w, s in enumerate(self._world)}
+        note = {"kind": "peers", "addrs": addrs,
+                "mepoch": self.membership_epoch}
+        for s in self._world:
+            self._out_qs[s].put((note, b""))
+
+    def pending_joins(self) -> int:
+        """Authenticated joiners parked and waiting to be absorbed."""
+        with self._admit_lock:
+            return len(self._pending_joins)
+
+    def spawn_joiner(self):
+        """Launch a fresh executor process that dials this driver as a
+        grow-on-join candidate (rank -1). It authenticates, parks, and
+        is absorbed by the next ``absorb_joiners()``. Returns the
+        launcher handle."""
+        spec = ExecutorSpec(
+            rank=-1, world=len(self._world),
+            driver_host=self._dial_addr[0], driver_port=self._dial_addr[1],
+            backend=self.backend, timeout=self.timeout,
+            hb_interval=self.hb_interval, data_plane=self.data_plane,
+            bind_host=self.bind_host, secret=self.secret,
+            secret_file=self._secret_path)
+        handle = self.launcher.launch(spec)
+        self._join_handles.append(handle)
+        return handle
+
+    def _claim_join_handle(self, pid):
+        for i, h in enumerate(self._join_handles):
+            if pid is not None and h.pid == pid:
+                return self._join_handles.pop(i)
+        return _ExternalHandle(pid)
+
+    def absorb_joiners(self) -> list[int]:
+        """Admit every parked joiner into the world (call at a step
+        boundary -- never mid-job): each gets the next launch slot, a
+        ``welcome`` frame assigning its slot + the new world size, and
+        the whole world is re-brokered under a bumped membership epoch.
+        Returns the new slots (empty if nobody was waiting)."""
+        with self._job_lock:
+            if self.closed:
+                raise RuntimeError("pool is shut down")
+            if self.broken:
+                raise ExecutorFailure(self.dead_ranks,
+                                      "cannot grow a broken pool; shrink "
+                                      "or relaunch first")
+            with self._admit_lock:
+                joins, self._pending_joins = self._pending_joins, []
+            if not joins:
+                return []
+            new_slots = []
+            for conn, header in joins:
+                slot = self.n
+                self.n += 1
+                addr = header.get("data_addr")
+                self._conns.append(conn)
+                self._out_qs.append(queue.Queue(maxsize=128))
+                self._last_seen.append(time.time())
+                self._conn_dead.append(False)
+                self._data_addrs.append((addr[0], addr[1]) if addr
+                                        else None)
+                self._rank_rtt.append(None)
+                self._handles.append(
+                    self._claim_join_handle(header.get("pid")))
+                self._world.append(slot)
+                new_slots.append(slot)
+                w = threading.Thread(target=self._writer, args=(slot,),
+                                     daemon=True)
+                self._writers.append(w)
+                w.start()
+            self.membership_epoch += 1
+            with self._lock:
+                self._wrank = {s: w for w, s in enumerate(self._world)}
+            for slot in new_slots:
+                # welcome first: ordered control socket => the joiner
+                # learns its slot before the peers frame that follows
+                self._out_qs[slot].put(
+                    ({"kind": "ctrl", "op": "welcome", "rank": slot,
+                      "size": len(self._world),
+                      "mepoch": self.membership_epoch}, b""))
+                r = threading.Thread(target=self._route, args=(slot,),
+                                     daemon=True)
+                self._routers.append(r)
+                r.start()
+            self._broker_peers()
+            _log.bound(world=len(self._world)).info(
+                "absorbed %d joiner(s) as slot(s) %s (epoch %d)",
+                len(new_slots), new_slots, self.membership_epoch)
+            return new_slots
+
+    def shrink_to_survivors(self) -> dict:
+        """Rebuild the world over the live ranks of a *broken* pool --
+        the elastic alternative to discarding it: survivors keep their
+        processes (and PIDs), get contiguous new world ranks in the old
+        order, and a re-brokered peers map under a bumped membership
+        epoch. Returns a remap-info dict::
+
+            {"old_size", "old_world", "new_world",
+             "dead_slots", "dead_old_ranks", "old_rank_of"}
+
+        where ``old_rank_of[w]`` is new world rank ``w``'s rank in the
+        *previous* epoch (what buddy-snapshot recovery needs to locate
+        shards). Raises ``ExecutorFailure`` if nothing survives."""
+        with self._job_lock:
+            if self.closed:
+                raise RuntimeError("pool is shut down")
+            if not self.broken:
+                raise RuntimeError("pool is not broken; nothing to "
+                                   "shrink from")
+            old_world = list(self._world)
+            dead = set(self.dead_ranks)
+            for s in old_world:     # catch deaths since the failure
+                if self._conn_dead[s] or not self._handles[s].is_alive():
+                    dead.add(s)
+            survivors = [s for s in old_world if s not in dead]
+            if not survivors:
+                raise ExecutorFailure(sorted(dead),
+                                      "no survivors to shrink to")
+            info = {
+                "old_size": len(old_world),
+                "old_world": old_world,
+                "new_world": list(survivors),
+                "dead_slots": sorted(d for d in dead if d in old_world),
+                "dead_old_ranks": [old_world.index(d)
+                                   for d in sorted(dead)
+                                   if d in old_world],
+                "old_rank_of": [old_world.index(s) for s in survivors],
+            }
+            self._world = survivors
+            self.membership_epoch += 1
+            with self._lock:
+                self._wrank = {s: w for w, s in enumerate(survivors)}
+            now = time.time()
+            for s in survivors:
+                self._last_seen[s] = now
+            self.broken = False
+            self.broken_reason = ""
+            self.dead_ranks = []
+            for s in info["dead_slots"]:    # reap, don't leak zombies
                 try:
-                    conn.close()
-                except OSError:
+                    self._handles[s].terminate()
+                    self._handles[s].join(timeout=0.5)
+                except Exception:   # noqa: BLE001 - best effort
                     pass
+            self._broker_peers()
+            _log.bound(world=len(survivors)).warning(
+                "shrunk to survivors %s (epoch %d; lost %s)", survivors,
+                self.membership_epoch, info["dead_slots"])
+            return info
+
+    def fail_ranks(self, ranks: list[int], reason: str) -> None:
+        """Externally declare slots dead -- the supervisor's proactive
+        suspicion path (heartbeat age over its threshold long before the
+        hard timeout). Marks the pool broken, notifies survivors, and
+        raises ``ExecutorFailure`` exactly like an organic detection."""
+        self._mark_broken(list(ranks), reason)
 
     @property
     def data_addrs(self) -> list[tuple[str, int] | None]:
@@ -407,7 +656,13 @@ class ExecutorPool:
                 kind = header.get("kind")
                 self.frame_counts[kind] += 1
                 if kind == "msg":
-                    self._out_qs[header["dst"]].put((header, payload))
+                    # relay mode addresses world ranks: map through the
+                    # membership to the destination's slot queue
+                    try:
+                        dst_slot = self._world[header["dst"]]
+                    except IndexError:
+                        continue    # straggler for a smaller, older world
+                    self._out_qs[dst_slot].put((header, payload))
                 elif kind == "hb":
                     rtt = header.get("rtt")
                     if rtt is not None:
@@ -423,9 +678,11 @@ class ExecutorPool:
                     for src, count in (header.get("peer_rx") or {}).items():
                         # watermark per (reporter, source): another peer's
                         # higher historical count must not mask fresh
-                        # progress on this edge
+                        # progress on this edge. Keys are slots (stable
+                        # data-plane identities).
                         k = (rank, int(src))
-                        if count > self._peer_rx_seen.get(k, -1):
+                        if (0 <= int(src) < len(self._last_seen)
+                                and count > self._peer_rx_seen.get(k, -1)):
                             self._peer_rx_seen[k] = count
                             self._last_seen[int(src)] = time.time()
                 elif kind == "trace":
@@ -433,18 +690,22 @@ class ExecutorPool:
                     # result frame on the same (ordered) control socket,
                     # so it is always stored by the time run() returns
                     with self._lock:
-                        if header.get("job") == self._cur_job:
-                            self._trace_snaps[rank] = wire.decode(payload)
+                        wr = self._wrank.get(rank)
+                        if header.get("job") == self._cur_job \
+                                and wr is not None:
+                            self._trace_snaps[wr] = wire.decode(payload)
                 elif kind == "result":
                     with self._lock:
-                        if header.get("job") != self._cur_job:
+                        wr = self._wrank.get(rank)
+                        if (header.get("job") != self._cur_job
+                                or wr is None or wr >= len(self._done)):
                             continue        # straggler from an aborted job
                         if header["ok"]:
-                            self._results[rank] = wire.decode(payload)
+                            self._results[wr] = wire.decode(payload)
                         else:
-                            self._errors[rank] = wire.decode(payload)
+                            self._errors[wr] = wire.decode(payload)
                             self._error_event.set()
-                        self._done[rank] = True
+                        self._done[wr] = True
                         if all(self._done):
                             self._done_event.set()
         except (ConnectionError, OSError, ValueError) as e:
@@ -456,26 +717,29 @@ class ExecutorPool:
 
     # -- job dispatch -------------------------------------------------------
     def _health_check(self) -> None:
-        dead = [r for r in range(self.n)
-                if self._conn_dead[r] or not self._handles[r].is_alive()]
+        dead = [s for s in self._world
+                if self._conn_dead[s] or not self._handles[s].is_alive()]
         if dead:
             self._mark_broken(dead, "executor process died between jobs")
 
     def rank_health(self) -> list[dict]:
-        """Per-rank liveness snapshot: process/connection state, seconds
-        since the last sign of life (any control bytes, or a peer_rx
-        vouch), and the latest heartbeat round-trip time (None until the
-        first hb/hb_ack exchange completes)."""
+        """Per-member liveness snapshot for the current world:
+        process/connection state, seconds since the last sign of life
+        (any control bytes, or a peer_rx vouch), and the latest
+        heartbeat round-trip time (None until the first hb/hb_ack
+        exchange completes). ``rank`` is the stable slot (what
+        ``fail_ranks`` takes); ``world_rank`` its current position."""
         now = time.time()
-        return [{"rank": r,
-                 "alive": self._handles[r].is_alive(),
-                 "conn_dead": self._conn_dead[r],
-                 "last_seen_age": max(0.0, now - self._last_seen[r]),
-                 "rtt": self._rank_rtt[r]}
-                for r in range(self.n)]
+        return [{"rank": s,
+                 "world_rank": w,
+                 "alive": self._handles[s].is_alive(),
+                 "conn_dead": self._conn_dead[s],
+                 "last_seen_age": max(0.0, now - self._last_seen[s]),
+                 "rtt": self._rank_rtt[s]}
+                for w, s in enumerate(self._world)]
 
     def _mark_broken(self, dead: list[int], reason: str):
-        _log.bound(world=self.n).warning(
+        _log.bound(world=len(self._world)).warning(
             "marking pool broken: rank(s) %s -- %s", sorted(set(dead)),
             reason)
         self.broken = True
@@ -486,13 +750,13 @@ class ExecutorPool:
         # now, not hang out their full receive timeouts
         note = {"kind": "ctrl", "op": "peer_dead",
                 "ranks": sorted(set(dead)), "reason": reason}
-        for r in range(self.n):
-            if r not in dead and not self._conn_dead[r]:
+        for s in self._world:
+            if s not in dead and not self._conn_dead[s]:
                 try:
-                    self._out_qs[r].put_nowait((note, b""))
+                    self._out_qs[s].put_nowait((note, b""))
                 except queue.Full:
                     pass        # writer backlogged: the timeout still bounds
-        raise ExecutorFailure(dead, reason)
+        raise ExecutorFailure(sorted(set(dead)), reason)
 
     def run(self, fn: Callable, backend: str | None = None,
             timeout: float | None = None,
@@ -538,12 +802,14 @@ class ExecutorPool:
             # tracing resolves at the *driver* (like segment_bytes), so
             # one shared decision reaches every rank of the job
             job_traced = trace_enabled() if trace is None else bool(trace)
+            world = list(self._world)
+            k = len(world)
             with self._lock:
                 self._job_seq += 1
                 job_id = self._cur_job = self._job_seq
-                self._results = [None] * self.n
-                self._done = [False] * self.n
-                self._errors = [None] * self.n
+                self._results = [None] * k
+                self._done = [False] * k
+                self._errors = [None] * k
                 self._done_event = threading.Event()
                 self._error_event = threading.Event()
                 done_event, error_event = self._done_event, self._error_event
@@ -551,13 +817,16 @@ class ExecutorPool:
                 self.last_trace = None
             job_seg = (env_segment_bytes() if segment_bytes is None
                        else int(segment_bytes))
-            header = {"kind": "job", "job": job_id, "backend": job_backend,
-                      "timeout": job_timeout, "segment_bytes": job_seg,
-                      "trace": job_traced}
             now = time.time()
-            for r in range(self.n):
-                self._last_seen[r] = now    # fresh grace period per job
-                self._out_qs[r].put((header, blob))
+            for w, s in enumerate(world):
+                # each slot gets its world identity for this epoch
+                header = {"kind": "job", "job": job_id,
+                          "backend": job_backend, "timeout": job_timeout,
+                          "segment_bytes": job_seg, "trace": job_traced,
+                          "rank": w, "size": k,
+                          "mepoch": self.membership_epoch}
+                self._last_seen[s] = now    # fresh grace period per job
+                self._out_qs[s].put((header, blob))
 
             deadline = time.time() + job_timeout
             self._prev_deadline = deadline
@@ -567,11 +836,11 @@ class ExecutorPool:
                 if error_event.is_set():
                     break
                 now = time.time()
-                dead = [r for r in range(self.n)
-                        if not self._done[r]
-                        and (self._conn_dead[r]
-                             or not self._handles[r].is_alive()
-                             or now - self._last_seen[r] > self.hb_timeout)]
+                dead = [s for w, s in enumerate(world)
+                        if not self._done[w]
+                        and (self._conn_dead[s]
+                             or not self._handles[s].is_alive()
+                             or now - self._last_seen[s] > self.hb_timeout)]
                 if dead:
                     self._raise_executor_errors()       # root cause first
                     reason = ("connection closed (heartbeats ended)"
@@ -590,7 +859,7 @@ class ExecutorPool:
             if job_traced:
                 with self._lock:
                     snaps = dict(self._trace_snaps)
-                self.last_trace = JobTrace(job_id, self.n, snaps)
+                self.last_trace = JobTrace(job_id, k, snaps)
             return list(self._results)
 
     def job_trace(self) -> JobTrace | None:
@@ -615,6 +884,24 @@ class ExecutorPool:
         if self.closed or os.getpid() != self._owner_pid:
             return      # fork-safety: only the creating process tears down
         self.closed = True
+        with self._admit_lock:
+            joins, self._pending_joins = self._pending_joins, []
+        for conn, header in joins:      # parked joiners: polite exit
+            try:
+                wire.send_frame(conn, {"kind": "ctrl", "op": "exit"})
+            except (ConnectionError, OSError):
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for h in self._join_handles:    # spawned but never absorbed
+            try:
+                h.terminate()
+                h.join(timeout=2.0)
+            except Exception:   # noqa: BLE001 - best effort
+                pass
+        self._join_handles = []
         for conn, q in zip(self._conns, self._out_qs):
             if conn is None:
                 continue

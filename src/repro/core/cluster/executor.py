@@ -97,6 +97,13 @@ class ExecutorChannel:
         self.exit_requested = threading.Event()
         self.peers_ready = threading.Event()
         self.peer_addrs: dict[int, tuple[str, int]] = {}
+        #: this rank's position in the *current membership epoch's* world
+        #: (== launch rank until a shrink/grow re-broker renumbers it);
+        #: updated by the job loop from each job frame. ``msg`` frames
+        #: address world ranks, so the self-send check compares this.
+        self.world_rank = rank
+        #: membership epoch of the last brokered peers frame
+        self.mepoch = 0
         self._peer_socks: dict[int, tuple[socket.socket, threading.Lock]] = {}
         self._peer_lock = threading.Lock()
         #: dst -> monotonic time before which we won't re-dial it. A
@@ -210,6 +217,33 @@ class ExecutorChannel:
         for mb in boxes:
             mb.poison_all(msg)
 
+    def _apply_peers(self, header: dict) -> None:
+        """Install a brokered peers map. The bootstrap broker sends one;
+        every membership change (shrink-to-survivors, grow-on-join)
+        re-brokers with a bumped ``mepoch``: addresses are then keyed by
+        *new* world ranks, so the old peer channels (keyed by ranks that
+        just changed meaning) are evicted, and the world is declared
+        healed -- mailboxes of *future* jobs must not be born poisoned
+        by a death the re-broker already survived."""
+        addrs = {int(r): (h, p) for r, (h, p) in header["addrs"].items()}
+        mepoch = int(header.get("mepoch", 0))
+        rebrokered = mepoch != self.mepoch
+        self.mepoch = mepoch
+        self.peer_addrs = addrs
+        if rebrokered:
+            with self._peer_lock:
+                self._peer_backoff.clear()
+                socks = list(self._peer_socks.values())
+                self._peer_socks.clear()
+            for s, _ in socks:
+                try:
+                    s.close()
+                except OSError:
+                    pass
+            with self._mb_lock:
+                self._peer_dead = None      # the new world is healthy
+        self.peers_ready.set()
+
     # -- control plane ------------------------------------------------------
     def _read_loop(self):
         nread = [0]
@@ -234,15 +268,15 @@ class ExecutorChannel:
                     self.jobs.put((header["job"], header["backend"],
                                    header["timeout"],
                                    header.get("segment_bytes"),
-                                   header.get("trace", False), payload))
+                                   header.get("trace", False),
+                                   header.get("rank"), header.get("size"),
+                                   header.get("mepoch", 0), payload))
                 elif kind == "hb_ack":
                     # same clock stamped both legs (our hb's t), so this
                     # is a true control-plane round trip
                     self.hb_rtt = max(0.0, time.time() - header["t"])
                 elif kind == "peers":
-                    self.peer_addrs = {int(r): (h, p) for r, (h, p)
-                                       in header["addrs"].items()}
-                    self.peers_ready.set()
+                    self._apply_peers(header)
                 elif kind == "ctrl" and header.get("op") == "peer_dead":
                     self.notify_peer_dead(header.get("ranks", []),
                                           header.get("reason", ""))
@@ -402,7 +436,7 @@ class ExecutorChannel:
         header = {"kind": "msg", "dst": dst_world, "ctx": ctx,
                   "tag": tag, "src": src_world, "job": job}
         tracer = self._tracers.get(job)
-        if self.data_plane == "direct" and dst_world == self.rank:
+        if self.data_plane == "direct" and dst_world == self.world_rank:
             # self-send: straight to mailbox, nothing ever encoded
             self.mailbox_for(job).put(ctx, tag, src_world, payload)
             return
@@ -532,13 +566,14 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
         raise SystemExit("executor: no shared secret (pass secret=, "
                          "--secret-file, or set $" + wire.SECRET_ENV)
 
+    joining = rank < 0      # grow-on-join: no slot yet, the driver assigns
     data_server = None
     data_port = None
     if data_plane == "direct":
         data_server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         data_server.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         data_server.bind((bind_host, 0))
-        data_server.listen(size)
+        data_server.listen(max(size, 8))
         data_port = data_server.getsockname()[1]
 
     sock = socket.create_connection(driver, timeout=timeout)
@@ -563,8 +598,28 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
     hello = {"kind": "hello", "rank": rank, "pid": os.getpid(),
              "data_addr": ([data_host, data_port]
                            if data_port is not None else None)}
+    if joining:
+        hello["join"] = True
     hello["mac"] = wire.hello_mac(secret, transcript, hello)
     wire.send_frame(sock, hello)
+    if joining:
+        # Parked until the driver absorbs us at a step boundary: the
+        # first frame is a ``welcome`` assigning our launch slot and the
+        # current world size. No heartbeats until then -- a parked rank
+        # is not a world member and must not trip the failure detector.
+        while True:
+            frame = wire.recv_frame(sock)
+            if frame is None:
+                os._exit(1)     # driver went away before absorbing us
+            header = frame[0]
+            if (header.get("kind") == "ctrl"
+                    and header.get("op") == "welcome"):
+                rank = int(header["rank"])
+                size = int(header.get("size", size) or 1)
+                break
+            if (header.get("kind") == "ctrl"
+                    and header.get("op") == "exit"):
+                os._exit(0)
     chan = ExecutorChannel(sock, rank, hb_interval, data_plane=data_plane,
                            data_server=data_server, host=data_host,
                            secret=secret)
@@ -576,9 +631,16 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
         job = chan.jobs.get()
         if job is None or chan.exit_requested.is_set():
             break
-        job_id, job_backend, job_timeout, job_seg, job_traced, blob = job
+        (job_id, job_backend, job_timeout, job_seg, job_traced,
+         job_rank, job_size, job_mepoch, blob) = job
+        # membership epochs renumber the world: the job frame carries
+        # this rank's world rank + size for *its* epoch (None = the
+        # launch-time identity, for epoch 0)
+        wrank = rank if job_rank is None else int(job_rank)
+        wsize = size if job_size is None else int(job_size)
+        chan.world_rank = wrank
         chan.purge_mailboxes_before(job_id)
-        tracer = Tracer(rank, size, job=job_id) if job_traced else None
+        tracer = Tracer(wrank, wsize, job=job_id) if job_traced else None
         chan.set_tracer(job_id, tracer)
 
         def flush_trace():
@@ -624,8 +686,8 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
             except (ConnectionError, OSError):
                 break
             continue
-        comm = ClusterComm(chan, tuple(range(size)), rank,
-                           ctx=job_id, epoch=("j", job_id),
+        comm = ClusterComm(chan, tuple(range(wsize)), wrank,
+                           ctx=job_id, epoch=("j", job_id, job_mepoch),
                            backend=job_backend or backend,
                            timeout=job_timeout or timeout, job=job_id,
                            segment_bytes=job_seg)

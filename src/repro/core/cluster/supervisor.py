@@ -1,23 +1,45 @@
-"""Checkpoint-restart supervision for the cluster runtime.
+"""Elastic supervision for the cluster runtime.
 
-This is the paper's section-3.1 fault story made real: the pool's
-failure detector declares a rank dead (``ExecutorFailure``), the
-supervisor restores the latest checkpoint, relaunches the world with the
-degraded phase-1 ``linear`` backend for ``recovery_steps`` steps (master
-relay is the mode the paper falls back to while coping with faults), and
-then the workload resumes the fast peer-to-peer backend -- all driven by
-the very same ``RecoveryPolicy``/``SupervisorState`` machinery
-``train.ft`` previously exercised only against *simulated* failures.
+This is the paper's section-3.1 fault story grown into an autoscaler.
+The pool's failure detector declares a rank dead (``ExecutorFailure``)
+and the supervisor recovers -- in order of preference:
+
+1. **shrink-to-survivors** (``elastic=True``): the pool rebuilds its
+   communicator over the live ranks (``shrink_to_survivors``) -- no
+   process relaunch, survivors keep their PIDs and warm peer channels --
+   and the workload resumes on the degraded phase-1 ``linear`` backend
+   for ``recovery_steps`` steps per ``RecoveryPolicy``, exactly like a
+   relaunch would. Closures see the shrink through
+   ``run_ctx.shrink_info`` (the pool's remap dict) and can reassemble
+   lost shards from buddy snapshots (``train.buddy``).
+2. **checkpoint-restart relaunch** (the legacy path, and the fallback
+   when too few ranks survive or ``elastic`` is off): discard the pool,
+   restore the latest disk checkpoint, relaunch the full world through
+   the configured launcher.
+
+**Grow-on-join**: a fresh executor that dials the driver mid-job parks
+until the next step boundary; ``run_steps`` absorbs it there
+(``absorb_joiners``), so the world rides preemptible capacity both ways.
+
+**Proactive suspicion** (``suspect_after``): a rank whose heartbeat age
+exceeds the threshold is declared dead *before* the hard ``hb_timeout``
+would strand a dispatched job -- ``rank_health()`` RTT/staleness wired
+into the failure decision.
+
+**Stragglers**: ``run_steps`` feeds per-step wall time to an optional
+``StragglerDetector``; events land in ``SupervisorState.straggler_events``
+and fire the ``on_straggler(step, dt, pool)`` hook.
 
 Two workload shapes:
 
 - ``run(make_closure, n)``: one closure owns the whole step loop (the
-  PR-1 contract). Each attempt gets a fresh ``ExecutorPool``; a failure
-  discards it and relaunches from the latest checkpoint.
+  PR-1 contract). A failure shrinks (elastic) or relaunches, then
+  re-dispatches the closure from the latest checkpoint.
 - ``run_steps(make_step, n, total_steps)``: each step is its own pooled
-  job, so the *same* warm executors serve every step -- and a rank that
-  dies **between** jobs (SIGKILL while the pool idles) is caught at the
-  next dispatch, checkpoint-restarted exactly like a mid-job death.
+  job on the *same* warm executors; membership changes land between
+  steps. Per-step results are persisted beside the checkpoint, so a
+  failure after the final step's checkpoint no longer loses the run's
+  return values.
 
 The closure contract is unchanged: ``run.comm_for(comm, step)`` applies
 the degrade schedule and rank 0 persists state with
@@ -26,6 +48,8 @@ the degrade schedule and rank 0 persists state with
 from __future__ import annotations
 
 import dataclasses
+import os
+import pickle
 import time
 from typing import Any, Callable
 
@@ -45,6 +69,13 @@ class RunContext:
     degraded_until: int              # steps <= this use the degrade backend
     fast_backend: str
     degrade_backend: str
+    #: ranks this attempt runs on (shrinks/grows move it off the
+    #: originally requested n)
+    world_size: int = 0
+    #: the pool's remap dict right after a shrink-to-survivors recovery
+    #: (``old_size``/``old_rank_of``/``dead_old_ranks``...), None
+    #: otherwise -- what ``train.buddy.BuddyCheckpointer.recover`` needs
+    shrink_info: dict | None = None
 
     def backend_for(self, step: int) -> str:
         return (self.degrade_backend if step <= self.degraded_until
@@ -70,7 +101,8 @@ class RunContext:
 
 @dataclasses.dataclass
 class ClusterSupervisor:
-    """Relaunch-from-checkpoint loop above ``ExecutorPool``.
+    """Recovery loop above ``ExecutorPool``: shrink-to-survivors first
+    (``elastic``), checkpoint-restart relaunch as the last resort.
 
     ``launcher`` is honored on *every* (re)launch: a world built from
     ssh/srun-spawned ranks is restarted the same way, never silently
@@ -88,6 +120,22 @@ class ClusterSupervisor:
     bind_host: str = "127.0.0.1"
     advertise_host: str | None = None
     secret: bytes | str | None = None
+    #: recover by shrinking to the survivors instead of relaunching;
+    #: full relaunch remains the fallback below ``min_ranks``
+    elastic: bool = False
+    min_ranks: int = 1
+    #: heartbeat age (seconds) that flags a rank dead proactively,
+    #: before the hard ``hb_timeout`` strands a dispatched job
+    suspect_after: float | None = None
+    straggler_detector: ft.StragglerDetector | None = None
+    #: called as ``on_straggler(step, dt, pool)`` when the detector
+    #: flags a step (after ``SupervisorState.on_straggler`` recorded it)
+    on_straggler: Callable | None = None
+    #: flushed (``finish()``) when the supervisor shuts down, so no
+    #: queued save is lost to process exit
+    async_ckpt: Any = None
+    #: per-step result files retained beside the checkpoints
+    keep_results: int = 3
 
     def __post_init__(self):
         self.state = ft.SupervisorState()
@@ -108,20 +156,23 @@ class ClusterSupervisor:
                             advertise_host=self.advertise_host,
                             secret=self.secret)
 
-    def _run_ctx(self, start: int, attempt: int) -> RunContext:
+    def _run_ctx(self, start: int, attempt: int, world_size: int,
+                 shrink_info: dict | None = None) -> RunContext:
         return RunContext(
             ckpt_dir=self.ckpt_dir,
             start_step=start,
             attempt=attempt,
             degraded_until=self.state.degraded_until,
             fast_backend=self.fast_backend,
-            degrade_backend=self.policy.degrade_backend)
+            degrade_backend=self.policy.degrade_backend,
+            world_size=world_size,
+            shrink_info=shrink_info)
 
     def _on_failure(self, e: ExecutorFailure) -> None:
         restart_step = self._latest_step()
         self.failures.append((restart_step, e.reason))
-        _log.warning("rank(s) %s failed (%s); restarting from step %d "
-                     "(restart %d/%d)", e.dead_ranks, e.reason,
+        _log.warning("rank(s) %s failed (%s); recovering from step %d "
+                     "(recovery %d/%d)", e.dead_ranks, e.reason,
                      restart_step, self.state.restarts + 1,
                      self.policy.max_restarts)
         # raises once policy.max_restarts is exhausted
@@ -129,28 +180,154 @@ class ClusterSupervisor:
         if self.restart_delay:
             time.sleep(self.restart_delay)
 
+    # -- elastic helpers ----------------------------------------------------
+    def _try_shrink(self, pool: ExecutorPool) -> dict | None:
+        """Shrink a broken pool to its survivors; None => caller must
+        fall back to a full relaunch (elastic off, nothing survived, or
+        below the ``min_ranks`` floor)."""
+        if not self.elastic:
+            return None
+        try:
+            info = pool.shrink_to_survivors()
+        except (ExecutorFailure, RuntimeError) as e:
+            _log.warning("shrink failed (%s); falling back to relaunch", e)
+            return None
+        if len(info["new_world"]) < max(1, self.min_ranks):
+            _log.warning("only %d survivor(s), below min_ranks=%d; "
+                         "falling back to relaunch",
+                         len(info["new_world"]), self.min_ranks)
+            return None
+        self.state.shrinks += 1
+        return info
+
+    def _suspect_check(self, pool: ExecutorPool) -> None:
+        """Proactive failure decision off ``rank_health()``: a rank with
+        no sign of life for ``suspect_after`` seconds is declared dead
+        now (raising ``ExecutorFailure``) instead of stranding the next
+        job until the hard timeout."""
+        if self.suspect_after is None:
+            return
+        sus = [h["rank"] for h in pool.rank_health()
+               if h["conn_dead"] or not h["alive"]
+               or h["last_seen_age"] > self.suspect_after]
+        if sus:
+            pool.fail_ranks(
+                sus, "suspected dead: no sign of life for "
+                f">{self.suspect_after:.2f}s (proactive shrink)")
+
+    def _observe_step(self, step: int, dt: float,
+                      pool: ExecutorPool) -> None:
+        det = self.straggler_detector
+        if det is None or not det.observe(step, dt):
+            return
+        self.state.on_straggler(step, dt, det.ewma or dt)
+        _log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
+                     step, dt, det.ewma or dt)
+        if self.on_straggler is not None:
+            self.on_straggler(step, dt, pool)
+
+    def _flush_async_ckpt(self) -> None:
+        if self.async_ckpt is None:
+            return
+        try:
+            self.async_ckpt.finish()
+        except Exception as e:      # noqa: BLE001 -- shutdown path: a
+            _log.warning("async checkpointer flush failed: %s", e)
+            # failed background save must not mask the primary outcome
+
+    # -- per-step result persistence ----------------------------------------
+    def _results_path(self, step: int) -> str:
+        return os.path.join(self.ckpt_dir, f"results_step_{step:08d}.pkl")
+
+    def _save_results(self, step: int, outs: list) -> None:
+        """Persist a completed step's per-rank results beside the
+        checkpoint (atomic + fsynced), so a later resume landing past
+        the final step can still return them."""
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        path = self._results_path(step)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump({"step": step, "results": outs}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, path)
+        kept = sorted(d for d in os.listdir(self.ckpt_dir)
+                      if d.startswith("results_step_")
+                      and not d.endswith(".tmp"))
+        for d in kept[:-self.keep_results]:
+            try:
+                os.unlink(os.path.join(self.ckpt_dir, d))
+            except OSError:
+                pass
+
+    def _recover_results(self, total_steps: int) -> list:
+        """A resume landed past the final step: its checkpoint was saved
+        but the result frames were lost to the failure. Recover the
+        per-rank results instead of failing the otherwise-successful
+        run: (a) the supervisor's persisted result file; (b) a
+        ``results`` list the closure stored in its final checkpoint's
+        meta; else the legacy loud error."""
+        path = self._results_path(total_steps)
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                return pickle.load(f)["results"]
+        from ...train import checkpoint as CKPT
+        try:
+            if CKPT.latest_step(self.ckpt_dir) == total_steps:
+                _, meta, _ = CKPT.load(self.ckpt_dir, total_steps)
+                if isinstance(meta, dict) and "results" in meta:
+                    return list(meta["results"])
+        except (OSError, ValueError, KeyError):
+            pass
+        raise RuntimeError(
+            "final step's results were lost to a failure after its "
+            "checkpoint was saved; state is recoverable from the "
+            "checkpoint but per-rank return values are not (closures "
+            "may store meta={'results': ...} at their final save to "
+            "close this hole)")
+
+    # -- workloads ----------------------------------------------------------
     def run(self, make_closure: Callable[[RunContext], Callable], n: int,
             ) -> list[Any]:
         """Run ``make_closure(run_ctx)`` across ``n`` pooled executors,
-        restarting from the latest checkpoint on executor death until the
-        closure completes or ``policy.max_restarts`` is exhausted."""
+        recovering from executor death (shrink when ``elastic``, else
+        relaunch from the latest checkpoint) until the closure completes
+        or ``policy.max_restarts`` is exhausted."""
         attempt = 0
-        while True:
-            start = self._latest_step()
-            run_ctx = self._run_ctx(start, attempt)
-            # every launch starts in the backend the schedule dictates
-            launch_backend = run_ctx.backend_for(start + 1)
-            pool = None
-            try:
-                pool = self._make_pool(n)   # spawn failure also restarts
-                return pool.run(make_closure(run_ctx),
-                                backend=launch_backend)
-            except ExecutorFailure as e:
-                self._on_failure(e)
-                attempt += 1
-            finally:
-                if pool is not None:
-                    pool.shutdown()
+        pool: ExecutorPool | None = None
+        shrink_info: dict | None = None
+        world_n = n
+        try:
+            while True:
+                start = self._latest_step()
+                run_ctx = self._run_ctx(start, attempt, world_n,
+                                        shrink_info)
+                # every launch starts in the backend the schedule dictates
+                launch_backend = run_ctx.backend_for(start + 1)
+                try:
+                    if pool is None or pool.closed:
+                        pool = self._make_pool(world_n)
+                    elif pool.broken:
+                        info = self._try_shrink(pool)
+                        if info is not None:
+                            shrink_info = run_ctx.shrink_info = info
+                            world_n = len(info["new_world"])
+                            run_ctx.world_size = world_n
+                        else:
+                            pool.shutdown()
+                            world_n = n     # full relaunch: full world
+                            shrink_info = run_ctx.shrink_info = None
+                            run_ctx.world_size = world_n
+                            pool = self._make_pool(world_n)
+                    return pool.run(make_closure(run_ctx),
+                                    backend=launch_backend)
+                except ExecutorFailure as e:
+                    self._on_failure(e)
+                    attempt += 1
+        finally:
+            if pool is not None:
+                pool.shutdown()
+            self._flush_async_ckpt()
 
     def run_steps(self, make_step: Callable[[RunContext, int], Callable],
                   n: int, total_steps: int,
@@ -159,35 +336,54 @@ class ClusterSupervisor:
         """Run ``make_step(run_ctx, step)`` as one pooled job per step,
         keeping the same warm pool across steps. ``on_step(step, pool)``
         is an instrumentation hook invoked after each completed step --
-        tests use it to injure the pool *between* jobs. Returns the final
-        step's per-rank results."""
+        tests use it to injure the pool *between* jobs. Membership
+        changes land at step boundaries: joiners are absorbed before a
+        step dispatches, failures shrink (elastic) or relaunch between
+        attempts. Returns the final step's per-rank results."""
         pool: ExecutorPool | None = None
         attempt = 0
+        shrink_info: dict | None = None
+        world_n = n
         try:
             while True:
                 start = self._latest_step()
-                run_ctx = self._run_ctx(start, attempt)
+                run_ctx = self._run_ctx(start, attempt, world_n,
+                                        shrink_info)
                 try:
-                    if pool is None or pool.broken or pool.closed:
-                        if pool is not None:
+                    if pool is None or pool.closed:
+                        pool = self._make_pool(world_n)
+                    elif pool.broken:
+                        info = self._try_shrink(pool)
+                        if info is not None:
+                            shrink_info = run_ctx.shrink_info = info
+                            world_n = len(info["new_world"])
+                            run_ctx.world_size = world_n
+                        else:
                             pool.shutdown()
-                        pool = self._make_pool(n)
+                            world_n = n
+                            shrink_info = run_ctx.shrink_info = None
+                            run_ctx.world_size = world_n
+                            pool = self._make_pool(world_n)
                     outs: list[Any] = []
                     for step in range(start + 1, total_steps + 1):
+                        if self.elastic and pool.pending_joins():
+                            # grow-on-join lands at the step boundary
+                            if pool.absorb_joiners():
+                                world_n = pool.size
+                                run_ctx.world_size = world_n
+                        self._suspect_check(pool)
+                        t0 = time.monotonic()
                         outs = pool.run(make_step(run_ctx, step),
                                         backend=run_ctx.backend_for(step))
+                        self._observe_step(step, time.monotonic() - t0,
+                                           pool)
+                        self._save_results(step, outs)
+                        # the remap was consumed by this completed step
+                        shrink_info = run_ctx.shrink_info = None
                         if on_step is not None:
                             on_step(step, pool)
                     if not outs and total_steps > 0:
-                        # resume landed past the final step: its ckpt was
-                        # saved but its result frames were lost to the
-                        # failure. Surface that loudly -- re-running the
-                        # step would double-apply its state update.
-                        raise RuntimeError(
-                            "final step's results were lost to a failure "
-                            "after its checkpoint was saved; state is "
-                            "recoverable from the checkpoint but per-rank "
-                            "return values are not")
+                        outs = self._recover_results(total_steps)
                     return outs
                 except ExecutorFailure as e:
                     self._on_failure(e)
@@ -195,3 +391,4 @@ class ClusterSupervisor:
         finally:
             if pool is not None:
                 pool.shutdown()
+            self._flush_async_ckpt()

@@ -238,4 +238,39 @@ def segment_spans(length: int, seg: int) -> list[tuple[int, int]]:
     return [(a, min(a + seg, length)) for a in range(0, length, seg)]
 
 
+# ---------------------------------------------------------------------------
+# Elastic-world remap math. Membership changes (shrink-to-survivors,
+# grow-on-join) re-number the world; every schedule above is a pure
+# function of (rank, size), so remapping is nothing but a rank table.
+# ---------------------------------------------------------------------------
+
+def buddy_rank(rank: int, size: int, offset: int = 1) -> int:
+    """The rank holding this rank's buddy snapshot: the next rank around
+    the ring (``offset`` hops). A world of one is its own buddy."""
+    if size < 1:
+        raise ValueError(f"need at least one rank, got size={size}")
+    return (rank + offset) % size
+
+
+def survivor_map(world: Sequence[int], dead: Sequence[int]) -> dict[int, int]:
+    """Contiguous re-numbering of the survivors of ``world`` (stable
+    identities, e.g. launch slots) after ``dead`` members are removed:
+    ``{member: new_rank}`` preserving the original order. Raises if
+    nothing survives."""
+    dead_set = set(dead)
+    survivors = [m for m in world if m not in dead_set]
+    if not survivors:
+        raise ValueError(f"no survivors in world {list(world)} "
+                         f"after deaths {sorted(dead_set)}")
+    return {m: i for i, m in enumerate(survivors)}
+
+
+def remap_group(group: Sequence[int], rank_map: dict[int, int]
+                ) -> tuple[int, ...]:
+    """Translate a group of old ranks through a membership remap,
+    dropping members that did not survive. Order (and therefore every
+    ring schedule derived from the group) is preserved."""
+    return tuple(rank_map[r] for r in group if r in rank_map)
+
+
 ReduceFn = Callable  # (a, b) -> elementwise combine; must be associative

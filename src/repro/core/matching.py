@@ -790,6 +790,13 @@ class MessageComm:
     getRank = property(get_rank)   # paper spelling: world.getRank
     getSize = property(get_size)
 
+    def buddy(self, offset: int = 1) -> int:
+        """The comm rank holding this rank's buddy snapshot (next rank
+        around the ring; ``groups.buddy_rank``). Elastic checkpointing
+        streams each rank's state shard to its buddy so a single failure
+        never loses a shard: the dead rank's copy survives one hop away."""
+        return G.buddy_rank(self._rank, len(self._group), offset)
+
     @property
     def context_id(self) -> int:
         return self._ctx
@@ -1354,6 +1361,27 @@ class MessageComm:
         API symmetry (waitall over mixed send/recv requests)."""
         self.send(dst, tag, data)
         return Request.completed(None, op="isend")
+
+    def ibsend(self, dst: int, tag: int, data: Any) -> Request:
+        """MPI_Ibsend: a buffered send performed *off* the caller's
+        thread, on the progress engine -- serialization and the socket
+        write included. ``isend`` completes the send inline before
+        returning, which puts a large payload's full streaming cost on
+        the critical path; ``ibsend`` is what lets it overlap with
+        compute (buddy snapshots stream this way). Ordering: engine
+        sends are FIFO among themselves but NOT ordered against
+        caller-thread sends to the same (dst, tag) -- use distinct tags
+        when mixing. Transports without an engine fall back to the
+        inline send."""
+        if self._async_mailbox() is None:
+            return self.isend(dst, tag, data)
+
+        def sched():
+            self.send(dst, tag, data)
+            return None
+            yield   # pragma: no cover -- makes this a (sendless) schedule
+
+        return self._submit_sched(sched(), op="ibsend", data=data)
 
     def irecv(self, src: int, tag: int) -> Request:
         """MPI_Irecv: a Request completed by message arrival (waiter

@@ -1,8 +1,8 @@
 from .optim import OptConfig, Optimizer, lr_at
 from .step import (init_opt_state, make_decode_step, make_prefill_step,
                    make_train_step)
-from . import checkpoint, compress, ft
+from . import buddy, checkpoint, compress, ft
 
 __all__ = ["OptConfig", "Optimizer", "lr_at", "init_opt_state",
            "make_decode_step", "make_prefill_step", "make_train_step",
-           "checkpoint", "compress", "ft"]
+           "buddy", "checkpoint", "compress", "ft"]

@@ -1,0 +1,210 @@
+"""Asynchronous in-cluster buddy checkpointing (arXiv 1804.11312 model).
+
+Instead of stalling the step loop on a disk write, each rank streams its
+state shard to its *buddy* -- the next rank around the ring
+(``comm.buddy()``) -- with ``isend``/``irecv`` driven by the runtime's
+progress engine, overlapped with the step's compute. The shards live in
+executor-process memory (module-level store, surviving across pooled
+jobs), so recovery after a failure needs no relaunch and no full-world
+disk restore: the survivors already hold every shard, including the dead
+rank's (one hop away at its buddy).
+
+Epoch/commit protocol -- a snapshot interrupted by the failure it is
+meant to survive must never be restored:
+
+1. ``snapshot(comm, step, shard)`` *stages* epoch ``step``: the local
+   shard is recorded, the transfer to the buddy starts nonblocking.
+2. ``commit(comm, handle)`` waits the transfers, records the peer shard,
+   then runs a tiny allreduce. The allreduce completing on *any* rank
+   proves every rank contributed -- i.e. every transfer of this epoch
+   was fully staged world-wide -- so only then is the epoch marked
+   committed locally.
+3. ``recover(...)`` (in the shrunken world) agrees on the restore epoch
+   as ``max`` over the survivors' latest *committed* epochs: if any rank
+   committed E, E is fully staged on every survivor; if the failure hit
+   mid-snapshot, nobody committed E and the agreement lands on E-1 --
+   the torn epoch is unreachable by construction.
+
+A single failure is always recoverable (the dead rank's shard is at its
+buddy). Losing a rank *and* its buddy loses a shard:``recover`` raises
+``BuddyShardLost`` and the caller falls back to the disk checkpoint.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+import numpy as np
+
+#: tag band for buddy traffic -- far above the small tags closures use
+_TAG_BASE = 1 << 20
+
+#: per-process stores, keyed by (namespace, rank); populated inside
+#: executor processes and surviving across pooled jobs (that persistence
+#: IS the checkpoint medium). Keying by rank too keeps the thread-mode
+#: SPMD runtime honest, where every rank shares one process.
+_STORES: dict[tuple[str, int], dict] = {}
+_STORES_LOCK = threading.Lock()
+
+
+class BuddyShardLost(RuntimeError):
+    """A needed shard died with both its owner and its buddy: in-memory
+    recovery is impossible, fall back to the disk checkpoint."""
+
+
+def _store(namespace: str, rank: int) -> dict:
+    with _STORES_LOCK:
+        return _STORES.setdefault((namespace, rank), {"epochs": {}})
+
+
+def reset(namespace: str | None = None) -> None:
+    """Drop staged state (tests; or a workload switching checkpoints)."""
+    with _STORES_LOCK:
+        if namespace is None:
+            _STORES.clear()
+        else:
+            for key in [k for k in _STORES if k[0] == namespace]:
+                del _STORES[key]
+
+
+class SnapshotHandle:
+    """In-flight snapshot: the nonblocking buddy transfer of one epoch."""
+
+    def __init__(self, step: int, send_req, recv_req):
+        self.step = step
+        self.send_req = send_req
+        self.recv_req = recv_req
+
+
+class BuddyCheckpointer:
+    """The in-memory twin of ``checkpoint.AsyncCheckpointer``: snapshot
+    to a buddy rank's memory instead of disk, overlapped with compute.
+
+    Usage inside a step closure (the executor process keeps the store
+    across jobs)::
+
+        bc = BuddyCheckpointer("myrun")
+        h = bc.snapshot(comm, step, my_shard)   # nonblocking
+        ...compute...
+        bc.commit(comm, h)                      # barrier + commit mark
+    """
+
+    def __init__(self, namespace: str = "default", history: int = 2,
+                 timeout: float = 30.0):
+        if history < 2:
+            raise ValueError("history must keep >= 2 epochs: the commit "
+                             "protocol falls back one epoch on a torn "
+                             "snapshot")
+        self.namespace = namespace
+        self.history = history
+        self.timeout = timeout
+
+    # -- snapshot/commit ----------------------------------------------------
+    def snapshot(self, comm, step: int, shard: Any) -> SnapshotHandle:
+        """Stage epoch ``step`` and start the nonblocking buddy
+        transfer. Returns a handle for ``commit``."""
+        size, rank = comm.get_size(), comm.get_rank()
+        store = _store(self.namespace, rank)
+        entry = {"step": step, "rank": rank, "size": size,
+                 "self": shard, "peer": None,
+                 "peer_src": (rank - 1) % size, "committed": False}
+        store["epochs"][step] = entry
+        self._prune(store)
+        if size == 1:
+            return SnapshotHandle(step, None, None)
+        tag = _TAG_BASE + step
+        # ibsend: the serialize+stream cost runs on the progress engine,
+        # not here -- the caller's compute is what it overlaps with
+        send_req = comm.ibsend(comm.buddy(), tag, (step, rank, shard))
+        recv_req = comm.irecv((rank - 1) % size, tag)
+        return SnapshotHandle(step, send_req, recv_req)
+
+    def commit(self, comm, handle: SnapshotHandle) -> None:
+        """Complete the epoch: wait the transfers, then agree world-wide
+        that every rank staged it before marking it committed. Raises
+        (``PeerDeadError`` et al.) if the world broke mid-snapshot --
+        leaving the epoch staged-but-uncommitted, exactly as the
+        protocol requires."""
+        store = _store(self.namespace, comm.get_rank())
+        entry = store["epochs"].get(handle.step)
+        if entry is None:
+            raise RuntimeError(f"epoch {handle.step} was pruned before "
+                               "commit; raise history")
+        if handle.recv_req is not None:
+            _, src_rank, peer_shard = handle.recv_req.wait(
+                timeout=self.timeout)
+            handle.send_req.wait(timeout=self.timeout)
+            entry["peer"] = peer_shard
+            entry["peer_src"] = src_rank
+        # all-staged barrier: completing proves every rank contributed,
+        # which requires its transfers staged -- the commit invariant
+        comm.allreduce(np.ones(1, np.float32), np.minimum)
+        entry["committed"] = True
+
+    def _prune(self, store: dict) -> None:
+        steps = sorted(store["epochs"])
+        for s in steps[:-self.history]:
+            del store["epochs"][s]
+
+    # -- introspection ------------------------------------------------------
+    def latest_committed(self, rank: int = 0) -> int | None:
+        epochs = _store(self.namespace, rank)["epochs"]
+        committed = [s for s, e in epochs.items() if e["committed"]]
+        return max(committed) if committed else None
+
+    def staged_steps(self, rank: int = 0) -> list[int]:
+        return sorted(_store(self.namespace, rank)["epochs"])
+
+    # -- recovery -----------------------------------------------------------
+    def recover(self, comm, old_size: int, old_rank_of: list[int],
+                dead_old_ranks: list[int]
+                ) -> tuple[int, dict[int, Any]]:
+        """Reassemble every old-world shard on every survivor, in the
+        *shrunken* world. ``old_rank_of[w]`` is new world rank ``w``'s
+        rank in the pre-failure epoch; ``dead_old_ranks`` the old ranks
+        that died (both come from ``ExecutorPool.shrink_to_survivors``).
+
+        Returns ``(restore_step, {old_rank: shard})`` -- the caller
+        rebalances shards over the new world however its state is
+        partitioned. Raises ``BuddyShardLost`` when a shard died with
+        both its owner and its buddy (fall back to disk)."""
+        size, rank = comm.get_size(), comm.get_rank()
+        old_rank = old_rank_of[rank]
+        # snapshots were staged under this process's *pre-failure* rank
+        store = _store(self.namespace, old_rank)
+        mine = self.latest_committed(old_rank)
+        agreed = int(comm.allreduce(
+            np.asarray([-1 if mine is None else mine], np.int64),
+            np.maximum)[0])
+        if agreed < 0:
+            raise BuddyShardLost("no committed buddy snapshot anywhere")
+        entry = store["epochs"].get(agreed)
+        contrib: dict[int, Any] = {}
+        if entry is not None:
+            contrib[old_rank] = entry["self"]
+            if (entry["peer"] is not None
+                    and entry["peer_src"] in dead_old_ranks):
+                # this survivor is the buddy of a dead rank: its staged
+                # copy is the only remaining instance of that shard
+                contrib[entry["peer_src"]] = entry["peer"]
+        # exchange via p2p (payloads are arbitrary objects; collectives
+        # may slice arrays): root merges, then fans the union back out
+        if size > 1:
+            if rank == 0:
+                merged = dict(contrib)
+                for src in range(1, size):
+                    merged.update(comm.receive(src, _TAG_BASE - 1))
+                for dst in range(1, size):
+                    comm.send(dst, _TAG_BASE - 2, merged)
+            else:
+                comm.send(0, _TAG_BASE - 1, contrib)
+                merged = comm.receive(0, _TAG_BASE - 2)
+        else:
+            merged = contrib
+        missing = sorted(set(range(old_size)) - set(merged))
+        if missing:
+            raise BuddyShardLost(
+                f"shard(s) of old rank(s) {missing} lost: owner and "
+                f"buddy both died (epoch {agreed}); fall back to the "
+                "disk checkpoint")
+        return agreed, merged

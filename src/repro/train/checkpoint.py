@@ -54,9 +54,25 @@ def _flatten(tree) -> dict[str, Any]:
     return out
 
 
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:     # pragma: no cover - exotic filesystems
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, state: dict, meta: dict | None = None,
          keep: int = 3) -> str:
-    """state: arbitrary pytree dict (e.g. {params, opt}). Returns path."""
+    """state: arbitrary pytree dict (e.g. {params, opt}). Returns path.
+
+    Crash-safe: every leaf and the manifest are fsynced before the
+    atomic rename, and the parent directory is fsynced after it -- a
+    power cut mid-save leaves only a ``.tmp`` dir (skipped by
+    ``latest_step``), never a torn ``step_N`` that restores garbage."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -65,14 +81,23 @@ def save(ckpt_dir: str, step: int, state: dict, meta: dict | None = None,
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         fname = key.replace(SEP, "__") + ".npy"
-        np.save(os.path.join(tmp, fname), _to_disk(arr))
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, _to_disk(arr))
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
                                    "dtype": arr.dtype.name}
+    # manifest last: its presence (and parseability) is the commit mark
+    # _valid_step checks, so a torn write can never look complete
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(ckpt_dir)
     _retain(ckpt_dir, keep)
     return final
 
@@ -84,12 +109,31 @@ def _retain(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, d))
 
 
+def _valid_step(ckpt_dir: str, step: int) -> bool:
+    """A step dir is restorable iff its manifest parses and every leaf
+    file it names exists -- a kill mid-write (or a partially deleted
+    dir) fails this and the step is skipped."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return all(os.path.exists(os.path.join(path, v["file"]))
+                   for v in manifest["leaves"].values())
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
+
+
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest *restorable* step: torn/corrupt step dirs (kill mid-write)
+    are skipped, falling back to the previous complete checkpoint."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
              if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+    for step in sorted(steps, reverse=True):
+        if _valid_step(ckpt_dir, step):
+            return step
+    return None
 
 
 def load(ckpt_dir: str, step: int | None = None) -> tuple[dict, dict, int]:
@@ -146,6 +190,7 @@ class AsyncCheckpointer:
         self.keep = keep
         self.q: queue.Queue = queue.Queue(maxsize=1)
         self.errors: list[Exception] = []
+        self._finished = False
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -167,7 +212,12 @@ class AsyncCheckpointer:
         self.q.put((step, host_state, meta))
 
     def finish(self):
-        self.q.put(None)
+        """Drain the queue, stop the writer, surface the first error.
+        Idempotent: the supervisor flushes pending saves on shutdown,
+        and a workload may already have called this itself."""
+        if not self._finished:
+            self._finished = True
+            self.q.put(None)
         self._thread.join()
         if self.errors:
             raise self.errors[0]

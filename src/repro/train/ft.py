@@ -85,6 +85,9 @@ class SupervisorState:
     restarts: int = 0
     degraded_until: int = -1
     straggler_events: int = 0
+    #: recoveries served by shrink-to-survivors (no relaunch) -- a
+    #: subset of ``restarts``, which counts every recovery either way
+    shrinks: int = 0
 
     def on_failure(self, step: int, policy: RecoveryPolicy) -> str:
         self.restarts += 1
@@ -92,6 +95,12 @@ class SupervisorState:
             raise RuntimeError("restart budget exhausted")
         self.degraded_until = step + policy.recovery_steps
         return policy.degrade_backend
+
+    def on_straggler(self, step: int, dt: float, ewma: float) -> None:
+        """Record a straggler event surfaced by ``StragglerDetector`` --
+        the supervisor calls this (and its user hook) instead of the
+        counter being write-only."""
+        self.straggler_events += 1
 
     def backend_for(self, step: int, fast_backend: str,
                     policy: RecoveryPolicy) -> str:

@@ -1,0 +1,272 @@
+"""Buddy checkpointing protocol + elastic supervisor units (fast lane:
+thread-mode SPMD worlds and unit-level supervisor helpers -- the real
+process worlds live in test_elastic.py)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import groups as G
+from repro.core import parallelize_func
+from repro.core.cluster import ExecutorFailure
+from repro.core.cluster.supervisor import ClusterSupervisor
+from repro.train import buddy as B
+from repro.train import checkpoint as CKPT
+from repro.train import ft
+
+
+# ---------------------------------------------------------------------------
+# Group helpers for elastic membership
+# ---------------------------------------------------------------------------
+
+def test_group_elastic_helpers():
+    assert G.buddy_rank(0, 4) == 1 and G.buddy_rank(3, 4) == 0
+    assert G.buddy_rank(2, 4, offset=2) == 0
+    assert G.buddy_rank(0, 1) == 0            # a world of one is its own buddy
+    with pytest.raises(ValueError):
+        G.buddy_rank(0, 0)
+    m = G.survivor_map([0, 1, 2, 3], [1])
+    assert m == {0: 0, 2: 1, 3: 2}            # contiguous, order-preserving
+    assert G.remap_group((0, 2, 3), m) == (0, 1, 2)
+    assert G.remap_group((1, 2), m) == (1,)   # dead members drop out
+    with pytest.raises(ValueError):
+        G.survivor_map([0, 1], [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# Buddy snapshot/commit/recover protocol (thread-mode SPMD oracle)
+# ---------------------------------------------------------------------------
+
+def test_buddy_requires_two_epoch_history():
+    with pytest.raises(ValueError, match="history"):
+        B.BuddyCheckpointer("x", history=1)
+
+
+def test_buddy_snapshot_commit_stages_peer_shard():
+    B.reset("t-sc")
+
+    def closure(comm):
+        bc = B.BuddyCheckpointer("t-sc", history=3)
+        r = comm.get_rank()
+        outs = []
+        for step in (1, 2):
+            h = bc.snapshot(comm, step, np.full(3, 10.0 * r + step))
+            bc.commit(comm, h)
+            outs.append(bc.latest_committed(r))
+        return outs
+
+    assert parallelize_func(closure).execute(4) == [[1, 2]] * 4
+    # every rank holds its left neighbor's shard (it is that rank's buddy)
+    for r in range(4):
+        e = B._store("t-sc", r)["epochs"][2]
+        assert e["committed"] and e["peer_src"] == (r - 1) % 4
+        np.testing.assert_array_equal(
+            e["peer"], np.full(3, 10.0 * ((r - 1) % 4) + 2))
+    B.reset("t-sc")
+
+
+def _stage_world(ns, n=4, committed=(1, 2), torn=3):
+    """Run an n-rank world that commits some epochs and leaves one
+    staged-but-uncommitted (the snapshot 'interrupted' by a failure)."""
+    def closure(comm):
+        bc = B.BuddyCheckpointer(ns, history=8)
+        r = comm.get_rank()
+        for step in committed:
+            bc.commit(comm, bc.snapshot(comm, step,
+                                        np.full(2, 100.0 * r + step)))
+        if torn is not None:
+            h = bc.snapshot(comm, torn, np.full(2, 100.0 * r + torn))
+            # transfers complete, but the world-wide commit never happens
+            if h.recv_req is not None:
+                h.recv_req.wait(timeout=10)
+                h.send_req.wait(timeout=10)
+        return bc.latest_committed(r)
+    return parallelize_func(closure).execute(n)
+
+
+def test_buddy_recover_skips_torn_epoch_and_rebuilds_dead_shard():
+    B.reset("t-rec")
+    assert _stage_world("t-rec") == [2] * 4
+    # rank 1 dies; survivors [0, 2, 3] renumber to a world of 3
+
+    def recover(comm):
+        bc = B.BuddyCheckpointer("t-rec")
+        step, shards = bc.recover(comm, old_size=4, old_rank_of=[0, 2, 3],
+                                  dead_old_ranks=[1])
+        return step, sorted(shards), float(shards[1][0])
+
+    for step, keys, dead_val in parallelize_func(recover).execute(3):
+        assert step == 2                  # torn epoch 3 is unreachable
+        assert keys == [0, 1, 2, 3]       # full old-world coverage
+        assert dead_val == 100.0 * 1 + 2  # from the buddy's staged copy
+    B.reset("t-rec")
+
+
+def test_buddy_owner_and_buddy_both_dead_raises_shard_lost():
+    B.reset("t-dbl")
+    _stage_world("t-dbl")
+    # ranks 1 and 2 die together: shard 1 lived only at its buddy (2)
+
+    def recover(comm):
+        bc = B.BuddyCheckpointer("t-dbl")
+        with pytest.raises(B.BuddyShardLost, match=r"old rank\(s\) \[1\]"):
+            bc.recover(comm, old_size=4, old_rank_of=[0, 3],
+                       dead_old_ranks=[1, 2])
+        return "lost"
+
+    assert parallelize_func(recover).execute(2) == ["lost"] * 2
+    B.reset("t-dbl")
+
+
+def test_buddy_recover_without_any_commit_raises():
+    B.reset("t-none")
+    _stage_world("t-none", committed=(), torn=1)
+
+    def recover(comm):
+        bc = B.BuddyCheckpointer("t-none")
+        with pytest.raises(B.BuddyShardLost, match="no committed"):
+            bc.recover(comm, old_size=4, old_rank_of=[0, 1, 2],
+                       dead_old_ranks=[3])
+        return "none"
+
+    assert parallelize_func(recover).execute(3) == ["none"] * 3
+    B.reset("t-none")
+
+
+def test_buddy_single_rank_world_snapshot():
+    B.reset("t-one")
+
+    def closure(comm):
+        bc = B.BuddyCheckpointer("t-one")
+        bc.commit(comm, bc.snapshot(comm, 1, np.arange(3.0)))
+        return bc.latest_committed(comm.get_rank())
+
+    assert parallelize_func(closure).execute(1) == [1]
+    B.reset("t-one")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint crash safety: torn step dirs are never restored
+# ---------------------------------------------------------------------------
+
+def test_latest_step_skips_torn_checkpoint(tmp_path):
+    d = str(tmp_path)
+    CKPT.save(d, 1, {"w": np.arange(4.0)})
+    CKPT.save(d, 2, {"w": np.arange(4.0) * 2})
+    assert CKPT.latest_step(d) == 2
+    # tear step 2: a leaf its manifest names goes missing
+    os.unlink(os.path.join(d, "step_00000002", "w.npy"))
+    assert CKPT.latest_step(d) == 1
+    flat, _, step = CKPT.load(d)
+    assert step == 1
+    np.testing.assert_array_equal(flat["w"], np.arange(4.0))
+    # a stray .tmp dir (kill before the atomic rename) is invisible
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    assert CKPT.latest_step(d) == 1
+
+
+def test_latest_step_skips_corrupt_manifest(tmp_path):
+    d = str(tmp_path)
+    CKPT.save(d, 1, {"w": np.zeros(2)})
+    CKPT.save(d, 2, {"w": np.ones(2)})
+    man = os.path.join(d, "step_00000002", "manifest.json")
+    with open(man, "w") as f:
+        f.write('{"step": 2, "leaves": {"w"')      # torn mid-write
+    assert CKPT.latest_step(d) == 1
+    os.unlink(os.path.join(d, "step_00000001", "manifest.json"))
+    assert CKPT.latest_step(d) is None             # nothing restorable
+
+
+def test_async_checkpointer_finish_is_idempotent(tmp_path):
+    ck = CKPT.AsyncCheckpointer(str(tmp_path))
+    ck.submit(3, {"w": np.full(2, 3.0)})
+    ck.finish()
+    ck.finish()                                    # supervisor's flush
+    _, _, step = CKPT.load(str(tmp_path))
+    assert step == 3
+
+
+# ---------------------------------------------------------------------------
+# Supervisor units: result persistence, straggler feed, suspicion
+# ---------------------------------------------------------------------------
+
+def _sup(tmp_path, **kw):
+    return ClusterSupervisor(str(tmp_path), **kw)
+
+
+def test_run_ctx_elastic_fields_default_inert(tmp_path):
+    sup = _sup(tmp_path)
+    ctx = sup._run_ctx(0, 0, 4)
+    assert ctx.world_size == 4 and ctx.shrink_info is None
+    assert ctx.backend_for(1) == "ring"
+
+
+def test_results_persist_atomic_and_pruned(tmp_path):
+    sup = _sup(tmp_path, keep_results=2)
+    for s in (1, 2, 3):
+        sup._save_results(s, [s * 10, s * 20])
+    files = sorted(f for f in os.listdir(tmp_path)
+                   if f.startswith("results_step_"))
+    assert files == ["results_step_00000002.pkl",
+                     "results_step_00000003.pkl"]
+    assert sup._recover_results(3) == [30, 60]
+
+
+def test_recover_results_falls_back_to_checkpoint_meta(tmp_path):
+    sup = _sup(tmp_path)
+    CKPT.save(str(tmp_path), 5, {"w": np.zeros(2)},
+              meta={"results": [1, 2, 3]})
+    assert sup._recover_results(5) == [1, 2, 3]
+    with pytest.raises(RuntimeError, match="results were lost"):
+        sup._recover_results(6)
+
+
+def test_supervisor_feeds_straggler_detector(tmp_path):
+    seen = []
+    det = ft.StragglerDetector(alpha=0.5, threshold=3.0, warmup=1)
+    sup = _sup(tmp_path, straggler_detector=det,
+               on_straggler=lambda step, dt, pool: seen.append((step, dt)))
+    for s in range(1, 5):
+        sup._observe_step(s, 1.0, None)
+    sup._observe_step(5, 30.0, None)
+    assert sup.state.straggler_events == 1        # no longer write-only
+    assert det.events and seen == [(5, 30.0)]
+    sup._observe_step(6, 1.0, None)               # EWMA not poisoned
+    assert sup.state.straggler_events == 1
+
+
+class _FakePool:
+    """rank_health/fail_ranks surface of ExecutorPool, one stale rank."""
+
+    def __init__(self):
+        self.failed = None
+
+    def rank_health(self):
+        return [{"rank": 0, "world_rank": 0, "alive": True,
+                 "conn_dead": False, "last_seen_age": 0.01, "rtt": 1e-4},
+                {"rank": 2, "world_rank": 1, "alive": True,
+                 "conn_dead": False, "last_seen_age": 9.0, "rtt": None}]
+
+    def fail_ranks(self, ranks, reason):
+        self.failed = (list(ranks), reason)
+        raise ExecutorFailure(list(ranks), reason)
+
+
+def test_suspect_check_triggers_proactive_failure(tmp_path):
+    pool = _FakePool()
+    _sup(tmp_path)._suspect_check(pool)           # off by default: no-op
+    assert pool.failed is None
+    sup = _sup(tmp_path, suspect_after=1.0)
+    with pytest.raises(ExecutorFailure):
+        sup._suspect_check(pool)
+    assert pool.failed[0] == [2]                  # the stale slot, by slot id
+    assert "suspected dead" in pool.failed[1]
+
+
+def test_supervisor_flushes_async_checkpointer(tmp_path):
+    ck = CKPT.AsyncCheckpointer(str(tmp_path))
+    ck.submit(7, {"w": np.full(2, 7.0)})
+    sup = _sup(tmp_path, async_ckpt=ck)
+    sup._flush_async_ckpt()
+    assert CKPT.latest_step(str(tmp_path)) == 7
+    sup._flush_async_ckpt()                       # idempotent via finish()

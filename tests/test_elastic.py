@@ -1,0 +1,390 @@
+"""Elastic worlds against real process death: shrink-to-survivors
+recovery (no relaunch, PIDs stable), grow-on-join absorption at step
+boundaries, and the buddy-snapshot epoch protocol under SIGKILL.
+
+The ``chaos`` marker selects the fault-injection subset (its own CI
+step); everything here is also ``cluster`` (real process worlds)."""
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import (ClusterSupervisor, ExecutorFailure,
+                                ExecutorPool)
+from repro.train import ft
+
+pytestmark = pytest.mark.cluster
+
+
+# ---------------------------------------------------------------------------
+# Pool-level shrink and grow
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_pool_shrink_to_survivors_keeps_pids():
+    """SIGKILL one rank; the pool rebuilds the communicator over the
+    survivors -- same processes, contiguous new ranks, working
+    collectives -- without relaunching anything."""
+    with ExecutorPool(4, backend="ring", timeout=30, hb_interval=0.05,
+                      hb_timeout=0.8) as pool:
+        assert pool.run(lambda c: c.allgather(c.get_rank())) == [[0, 1, 2, 3]] * 4
+        pids = pool.pids
+        os.kill(pids[2], signal.SIGKILL)
+        time.sleep(0.3)
+        with pytest.raises(ExecutorFailure):
+            pool.run(lambda c: c.barrier(), timeout=20)
+        assert pool.broken
+
+        info = pool.shrink_to_survivors()
+        assert info["old_size"] == 4 and info["new_world"] == [0, 1, 3]
+        assert info["dead_slots"] == [2] and info["dead_old_ranks"] == [2]
+        assert info["old_rank_of"] == [0, 1, 3]
+        assert pool.size == 3 and not pool.broken
+        # survivors kept their processes: this was a re-broker, not a fork
+        assert [pool.pids[s] for s in pool.world] == [pids[0], pids[1],
+                                                      pids[3]]
+        out = pool.run(lambda c: (c.get_rank(), c.get_size(),
+                                  float(c.allreduce(
+                                      np.float64(c.get_rank() + 1),
+                                      lambda a, b: a + b))))
+        assert out == [(0, 3, 6.0), (1, 3, 6.0), (2, 3, 6.0)]
+
+
+def _seg_allreduce_job(c):
+    rng = np.random.default_rng(c.get_rank())
+    x = rng.standard_normal(1 << 12).astype(np.float32)
+    return c.allreduce(x, lambda a, b: a + b)
+
+
+@pytest.mark.timeout(120)
+def test_grow_on_join_bitexact_with_static_oracle():
+    """A fresh rank dials the driver, parks, is absorbed at a boundary;
+    the grown world's segmented allreduce is bit-exact against a world
+    that was 3-wide from the start."""
+    kw = dict(backend="ring", timeout=30, hb_interval=0.05, hb_timeout=1.0)
+    with ExecutorPool(3, **kw) as oracle:
+        want = oracle.run(_seg_allreduce_job, backend="segmented",
+                          segment_bytes=4096)
+    with ExecutorPool(2, **kw) as pool:
+        pids0 = [pool.pids[s] for s in pool.world]
+        pool.run(lambda c: c.allgather(c.get_rank()))
+        pool.spawn_joiner()
+        deadline = time.time() + 30
+        while pool.pending_joins() < 1 and time.time() < deadline:
+            time.sleep(0.05)
+        assert pool.pending_joins() == 1
+        assert pool.size == 2                     # parked, not yet a member
+
+        assert pool.absorb_joiners() == [2]
+        assert pool.size == 3 and pool.pending_joins() == 0
+        got = pool.run(_seg_allreduce_job, backend="segmented",
+                       segment_bytes=4096)
+        # the original members were not relaunched to grow the world
+        assert [pool.pids[s] for s in pool.world[:2]] == pids0
+        assert len(got) == 3
+        for g, w in zip(got, want):
+            assert g.dtype == w.dtype
+            np.testing.assert_array_equal(g, w)   # bit-exact, not approx
+
+
+@pytest.mark.chaos
+@pytest.mark.timeout(120)
+def test_join_during_inflight_segmented_iallreduce_parks(tmp_path):
+    """A rank that dials mid-job -- while a segmented iallreduce is in
+    flight -- must be parked until the step boundary: the running job's
+    world and results are untouched, and the next boundary absorbs it."""
+    gate = str(tmp_path / "inflight")
+
+    def job(c):
+        if c.get_rank() == 0:
+            open(gate, "w").close()              # signal: job is in flight
+        cc = c.with_segment_bytes(2048)
+        acc = np.zeros(1 << 10, np.float32)
+        for i in range(30):
+            x = np.full(1 << 10, float(c.get_rank() + i), np.float32)
+            acc = acc + cc.iallreduce(x, lambda a, b: a + b).wait(timeout=30)
+            time.sleep(0.02)
+        return acc
+
+    with ExecutorPool(2, backend="segmented", timeout=90, hb_interval=0.05,
+                      hb_timeout=2.0) as pool:
+        res = {}
+        t = threading.Thread(
+            target=lambda: res.setdefault("out", pool.run(job, timeout=90)))
+        t.start()
+        deadline = time.time() + 30
+        while not os.path.exists(gate) and time.time() < deadline:
+            time.sleep(0.02)
+        assert os.path.exists(gate)
+        pool.spawn_joiner()                       # dials mid-collective
+        t.join(timeout=100)
+        assert not t.is_alive()
+
+        expect = np.full(1 << 10,
+                         float(sum(r + i for r in range(2)
+                                   for i in range(30))), np.float32)
+        np.testing.assert_array_equal(res["out"][0], expect)
+        assert pool.size == 2                     # never joined mid-job
+        deadline = time.time() + 30
+        while pool.pending_joins() < 1 and time.time() < deadline:
+            time.sleep(0.05)
+        assert pool.pending_joins() == 1
+        assert pool.absorb_joiners() == [2]
+        assert pool.run(lambda c: c.allgather(c.get_size())) == [[3, 3, 3]] * 3
+
+
+# ---------------------------------------------------------------------------
+# Supervisor: shrink-first recovery, suspicion, buddy-snapshot chaos
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.timeout(120)
+def test_supervisor_elastic_shrink_no_relaunch(tmp_path):
+    """SIGKILL between steps with ``elastic=True``: the supervisor
+    shrinks to the survivors (same PIDs -- no relaunch), restores the
+    step-4 checkpoint, resumes degraded per RecoveryPolicy, and the run
+    completes with the correct (smaller-world) results."""
+    total, n, kill_after = 8, 3, 4
+    killed, pids_seen = [], {}
+
+    def make_step(run, step):
+        def closure(comm):
+            rank = comm.get_rank()
+            restored = run.restore()
+            acc = 0.0 if restored is None else float(restored[0]["acc"][0])
+            acc += float(comm.allreduce(np.float64(step),
+                                        lambda a, b: a + b))
+            if rank == 0:
+                run.save(step, {"acc": np.array([acc])})
+            return acc, comm.backend
+        return closure
+
+    def on_step(step, pool):
+        pids_seen[step] = [pool.pids[s] for s in pool.world]
+        if step == kill_after and not killed:
+            killed.append(pool.pids[1])
+            os.kill(pool.pids[1], signal.SIGKILL)
+            time.sleep(0.3)
+
+    policy = ft.RecoveryPolicy(degrade_backend="linear", recovery_steps=2,
+                               max_restarts=3)
+    sup = ClusterSupervisor(str(tmp_path), policy=policy,
+                            fast_backend="ring", timeout=30,
+                            hb_interval=0.05, hb_timeout=0.8,
+                            elastic=True, min_ranks=2)
+    out = sup.run_steps(make_step, n, total, on_step=on_step)
+
+    assert killed and sup.state.restarts == 1
+    assert sup.state.shrinks == 1                 # recovered WITHOUT relaunch
+    pre, post = pids_seen[kill_after], pids_seen[total]
+    assert post == [pre[0], pre[2]]               # survivors kept their PIDs
+    # steps 1..4 summed over 3 ranks, 5..8 over the shrunken 2
+    expect = sum(3.0 * s for s in range(1, kill_after + 1)) + \
+        sum(2.0 * s for s in range(kill_after + 1, total + 1))
+    assert len(out) == n - 1                      # degraded world size
+    for acc, backend in out:
+        assert acc == expect
+        assert backend == "ring"                  # past the degrade window
+
+    # degrade schedule was honored on the shrunken pool, too
+    assert sup.failures[0][0] == kill_after
+
+
+@pytest.mark.timeout(120)
+def test_suspect_after_beats_hard_timeout(tmp_path):
+    """A SIGSTOPped rank (process alive, connection open, heartbeats
+    silent) is only caught by staleness: the suspicion threshold
+    declares it dead and shrinks long before hb_timeout=30s would."""
+    total, n = 6, 3
+    stopped = []
+
+    def make_step(run, step):
+        def closure(comm):
+            return float(comm.allreduce(np.float64(step),
+                                        lambda a, b: a + b))
+        return closure
+
+    def on_step(step, pool):
+        if step == 2 and not stopped:
+            stopped.append(pool.pids[pool.world[1]])
+            os.kill(stopped[0], signal.SIGSTOP)
+            time.sleep(1.0)                       # staleness accrues
+
+    sup = ClusterSupervisor(str(tmp_path),
+                            policy=ft.RecoveryPolicy(recovery_steps=1,
+                                                     max_restarts=2),
+                            fast_backend="ring", timeout=30,
+                            hb_interval=0.05, hb_timeout=30.0,
+                            elastic=True, min_ranks=1, suspect_after=0.6)
+    t0 = time.monotonic()
+    try:
+        out = sup.run_steps(make_step, n, total, on_step=on_step)
+        elapsed = time.monotonic() - t0
+    finally:
+        if stopped:                               # never leak a stopped proc
+            try:
+                os.kill(stopped[0], signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+    assert sup.state.shrinks == 1
+    assert "suspected dead" in sup.failures[0][1]
+    assert elapsed < 20.0                         # nowhere near hb_timeout
+    assert out == [2.0 * total] * 2               # finished on 2 ranks
+
+
+@pytest.mark.chaos
+@pytest.mark.timeout(180)
+def test_sigkill_mid_snapshot_stale_epoch_never_restored(tmp_path):
+    """The acceptance chaos case: a rank SIGKILLs mid-flight through an
+    async buddy snapshot of epoch K. Nobody commits K, so recovery in
+    the shrunken world agrees on K-1 -- the torn epoch is unreachable --
+    and the dead rank's K-1 shard is rebuilt from its buddy's copy."""
+    total, n, kill_step = 6, 3, 4
+    marker = str(tmp_path / "recover.txt")
+
+    def make_step(run, step):
+        shrink = run.shrink_info
+
+        def closure(comm):
+            from repro.train import buddy as B
+            bc = B.BuddyCheckpointer("chaos-snap", history=6)
+            rank = comm.get_rank()
+            if shrink is not None:
+                ep, shards = bc.recover(comm, shrink["old_size"],
+                                        shrink["old_rank_of"],
+                                        shrink["dead_old_ranks"])
+                if rank == 0:
+                    dead = shrink["dead_old_ranks"][0]
+                    with open(marker, "w") as f:
+                        f.write(f"{ep}|{float(shards[dead][0])}")
+            h = bc.snapshot(comm, step, np.full(2, 10.0 * rank + step))
+            if run.attempt == 0 and step == kill_step and rank == 1:
+                os.kill(os.getpid(), signal.SIGKILL)   # mid-snapshot death
+            try:
+                bc.commit(comm, h)
+            except Exception:
+                # the failure this snapshot was meant to survive: the
+                # epoch stays staged-but-uncommitted, per the protocol
+                pass
+            if rank == 0:
+                run.save(step, {"s": np.zeros(1)})
+            return step
+        return closure
+
+    sup = ClusterSupervisor(str(tmp_path),
+                            policy=ft.RecoveryPolicy(recovery_steps=1,
+                                                     max_restarts=3),
+                            fast_backend="ring", timeout=60,
+                            hb_interval=0.05, hb_timeout=0.8,
+                            elastic=True, min_ranks=2)
+    out = sup.run_steps(make_step, n, total)
+
+    assert sup.state.shrinks == 1 and len(out) == n - 1
+    ep, dead_val = open(marker).read().split("|")
+    # epoch kill_step was torn: the agreement lands on the last epoch
+    # that committed world-wide, never the stale one
+    assert int(ep) == kill_step - 1
+    # and the dead rank's shard at that epoch came from its buddy
+    assert float(dead_val) == 10.0 * 1 + (kill_step - 1)
+
+
+@pytest.mark.chaos
+@pytest.mark.timeout(180)
+def test_owner_and_buddy_dead_falls_back_to_disk(tmp_path):
+    """Double failure -- a rank AND the buddy holding its shard die
+    together. In-memory recovery is impossible (BuddyShardLost); the
+    closure falls back to the disk checkpoint and the run completes."""
+    total, n, kill_after = 6, 4, 3
+    marker = str(tmp_path / "fallback.txt")
+    killed = []
+
+    def make_step(run, step):
+        shrink = run.shrink_info
+
+        def closure(comm):
+            from repro.train import buddy as B
+            bc = B.BuddyCheckpointer("chaos-dbl", history=6)
+            rank = comm.get_rank()
+            restored = run.restore()
+            acc = 0.0 if restored is None else float(restored[0]["acc"][0])
+            if shrink is not None:
+                try:
+                    bc.recover(comm, shrink["old_size"],
+                               shrink["old_rank_of"],
+                               shrink["dead_old_ranks"])
+                    src = "buddy"
+                except B.BuddyShardLost:
+                    src = "disk"      # acc above IS the disk fallback
+                if rank == 0:
+                    open(marker, "w").write(src)
+            acc += float(comm.allreduce(np.float64(step),
+                                        lambda a, b: a + b))
+            try:
+                bc.commit(comm, bc.snapshot(comm, step, np.array([acc])))
+            except Exception:
+                pass
+            if rank == 0:
+                run.save(step, {"acc": np.array([acc])})
+            return acc
+        return closure
+
+    def on_step(step, pool):
+        if step == kill_after and not killed:
+            for w in (1, 2):          # old rank 1 and its buddy, rank 2
+                killed.append(pool.pids[pool.world[w]])
+                os.kill(pool.pids[pool.world[w]], signal.SIGKILL)
+            time.sleep(0.3)
+
+    sup = ClusterSupervisor(str(tmp_path),
+                            policy=ft.RecoveryPolicy(recovery_steps=1,
+                                                     max_restarts=3),
+                            fast_backend="ring", timeout=60,
+                            hb_interval=0.05, hb_timeout=0.8,
+                            elastic=True, min_ranks=2)
+    out = sup.run_steps(make_step, n, total, on_step=on_step)
+
+    assert len(killed) == 2 and sup.state.shrinks == 1
+    assert open(marker).read() == "disk"
+    expect = sum(4.0 * s for s in range(1, kill_after + 1)) + \
+        sum(2.0 * s for s in range(kill_after + 1, total + 1))
+    assert out == [expect] * 2
+
+
+@pytest.mark.timeout(120)
+def test_run_steps_final_results_survive_posthumous_failure(tmp_path):
+    """The lost-final-result hole: a failure lands after the final step
+    completed (checkpoint saved, results persisted). A resume that finds
+    nothing left to execute must return the real per-rank results, not
+    raise."""
+    total, n = 4, 2
+    killed = []
+
+    def make_step(run, step):
+        def closure(comm):
+            rank = comm.get_rank()
+            if rank == 0:
+                run.save(step, {"s": np.full(1, float(step))})
+            return step * 100 + rank
+        return closure
+
+    def on_step(step, pool):
+        if step == total and not killed:
+            killed.append(pool.pids[pool.world[0]])
+            os.kill(killed[0], signal.SIGKILL)
+            time.sleep(0.3)
+            # the *next* dispatch attempt notices the death; there is no
+            # next step, so only the persisted results can save the run
+            pool.fail_ranks([pool.world[0]], "post-final-step death")
+
+    sup = ClusterSupervisor(str(tmp_path),
+                            policy=ft.RecoveryPolicy(recovery_steps=1,
+                                                     max_restarts=2),
+                            fast_backend="ring", timeout=30,
+                            hb_interval=0.05, hb_timeout=0.8,
+                            elastic=True, min_ranks=1)
+    out = sup.run_steps(make_step, n, total, on_step=on_step)
+    assert out == [total * 100 + r for r in range(n)]
+    assert sup.state.restarts == 1                # the failure was real
