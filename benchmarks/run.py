@@ -525,6 +525,57 @@ def bench_shrink_recovery_latency(quick: bool):
 
 
 # ---------------------------------------------------------------------------
+# Dataset shuffle: the Spark-shaped layer's wordcount on the collectives
+# shuffle (map-side combine + pipelined ireducescatter between warm
+# executors) vs the naive driver-gather baseline (every raw record
+# relayed through the driver and merged single-threaded). The workload
+# shape follows the Spark-on-HPC study's shuffle-heavy kernels.
+# ---------------------------------------------------------------------------
+
+DATASET_SHUFFLE_ACCEPTANCE = 2.0    # collectives must beat driver-gather
+
+
+def bench_dataset_shuffle(quick: bool):
+    from repro.data import DataContext
+    n, nparts, vocab = 4, 8, 997
+    nrec = 60_000 if quick else 200_000
+    reps = 3 if quick else 5
+
+    with DataContext(n, mode="cluster", timeout=120) as ctx:
+        def build(sort=False):
+            # range roots regenerate executor-side: the rows time the
+            # shuffle, not driver->executor argument shipping
+            words = ctx.range(nrec, nparts).map(
+                lambda i: (f"w{(i * 2654435761) % vocab:03d}", 1))
+            counts = words.reduceByKey(lambda a, b: a + b, nparts=nparts)
+            return counts.sortByKey(nparts=4) if sort else counts
+
+        build().collect()                       # warm the pool + plan path
+        bench(f"dataset_wordcount_collectives_n{n}",
+              lambda: build().collect(), repeat=reps,
+              derived=f"{nrec} records -> {vocab} keys, map-side combine "
+                      "+ pipelined ireducescatter, never via driver")
+        bench(f"dataset_wordcount_gather_n{n}",
+              lambda: build().collect(shuffle="gather"), repeat=reps,
+              derived="naive baseline: all raw records relayed through "
+                      "the driver, merged single-threaded")
+        bench(f"dataset_sort_collectives_n{n}",
+              lambda: build(sort=True).collect(), repeat=reps,
+              derived="wordcount + sampled range-partition sortByKey on "
+                      "alltoall")
+
+    t_coll = row_value(f"dataset_wordcount_collectives_n{n}")
+    t_gather = row_value(f"dataset_wordcount_gather_n{n}")
+    speedup = t_gather / max(t_coll, 1.0)
+    verdict = (f"{speedup:.1f}x shuffle-on-collectives vs driver-gather "
+               f"(acceptance: >={DATASET_SHUFFLE_ACCEPTANCE}x)")
+    if speedup < DATASET_SHUFFLE_ACCEPTANCE:
+        verdict = (f"FAILED: {verdict}; collectives shuffle must beat "
+                   "the driver relay")
+    ROWS.append((f"dataset_shuffle_speedup_n{n}", 0.0, verdict))
+
+
+# ---------------------------------------------------------------------------
 # Wire codec: array payload round trip (decode copies exactly once via
 # memoryview -- this row tracks the data-plane byte-moving cost).
 # ---------------------------------------------------------------------------
@@ -799,6 +850,8 @@ REQUIRED_ROW_PREFIXES = (
     "listing4_ckpt_sync_stall", "listing4_ckpt_async_overhead",
     "shrink_recovery_latency", "relaunch_recovery_latency",
     "shrink_vs_relaunch_speedup",
+    "dataset_wordcount_collectives", "dataset_wordcount_gather",
+    "dataset_shuffle_speedup",
     "figure1_api_parity", "wire_codec_roundtrip",
 )
 
@@ -834,6 +887,7 @@ def main() -> None:
     bench_listing4_2d_matvec()
     bench_listing4_ckpt_async_overhead(args.quick)
     bench_shrink_recovery_latency(args.quick)
+    bench_dataset_shuffle(args.quick)
     bench_spawn_launcher(args.quick)
     bench_figure1_api_parity()
     bench_wire_codec(args.quick)

@@ -1,0 +1,70 @@
+"""Dataset quickstart: wordcount and sort on the partitioned-dataset
+layer (the runnable version of docs/dataset.md's examples).
+
+Runs the same plan in ``single`` mode (the in-process oracle) and in
+``local`` mode (thread ranks, real shuffles on the runtime's
+collectives) and asserts they are bit-exact -- CI runs this as the
+docs smoke. Switch ``MODE`` to ``"cluster"`` to run it across real
+executor processes with lineage recovery; nothing else changes.
+
+Usage: PYTHONPATH=src python examples/dataset_quickstart.py
+"""
+from repro.data import DataContext
+
+MODE = "local"
+
+CORPUS = """\
+to be or not to be that is the question
+whether tis nobler in the mind to suffer
+the slings and arrows of outrageous fortune
+or to take arms against a sea of troubles
+and by opposing end them
+""".splitlines()
+
+
+def wordcount(ctx):
+    """lines -> words -> (word, 1) -> counts, descending by count."""
+    return (ctx.parallelize(CORPUS, nparts=4)
+              .flatMap(str.split)
+              .map(lambda w: (w, 1))
+              .reduceByKey(lambda a, b: a + b)
+              .map(lambda kv: (kv[1], kv[0]))
+              .sortByKey(ascending=False, nparts=2))
+
+
+def sorted_evens(ctx):
+    """A shuffle-heavy numeric kernel: filter, key, global sort."""
+    return (ctx.range(1000, nparts=8)
+              .filter(lambda i: i % 2 == 0)
+              .map(lambda i: (i * 2654435761 % 1000, i))
+              .sortByKey(nparts=4))
+
+
+def main() -> None:
+    with DataContext(4, mode="single") as oracle_ctx:
+        want_wc = wordcount(oracle_ctx).collect()
+        want_ev = sorted_evens(oracle_ctx).collect()
+
+    with DataContext(4, mode=MODE) as ctx:
+        counts = wordcount(ctx).collect()
+        assert counts == want_wc, "wordcount diverged from the oracle"
+        print(f"[{MODE}] top words:",
+              ", ".join(f"{w}x{c}" for c, w in counts[:5]))
+
+        evens = sorted_evens(ctx).collect()
+        assert evens == want_ev, "sort diverged from the oracle"
+        keys = [k for k, _ in evens]
+        assert keys == sorted(keys)
+        print(f"[{MODE}] sorted {len(evens)} records across "
+              f"{sorted_evens(ctx).nparts} partitions; "
+              f"first={evens[0]}, last={evens[-1]}")
+
+        # lineage stats of the last collect: which shuffle partitions
+        # were (re)computed -- all of them, on a healthy first run
+        print(f"[{MODE}] lineage stats:", ctx.last_stats["recomputed"])
+    print("ok: local shuffles on collectives are bit-exact with the "
+          "single-process oracle")
+
+
+if __name__ == "__main__":
+    main()

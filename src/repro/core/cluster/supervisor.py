@@ -287,6 +287,45 @@ class ClusterSupervisor:
             "close this hole)")
 
     # -- workloads ----------------------------------------------------------
+    def run_job(self, make_job: Callable[[RunContext], Callable],
+                pool: ExecutorPool, *, backend: str | None = None,
+                timeout: float | None = None) -> list[Any]:
+        """Run one pooled job elastically on a *caller-owned* warm pool.
+
+        Unlike ``run``/``run_steps`` the pool is external state: it is
+        never shut down or relaunched here, so recovery is
+        shrink-to-survivors only (``elastic=True`` required to recover
+        at all) and any materialized state the executors hold -- e.g.
+        ``data.dataset``'s partition store -- survives the retry.
+        ``make_job(run_ctx)`` sees ``run_ctx.shrink_info`` on a
+        post-shrink attempt and re-derives the work the dead ranks lost
+        (lineage recompute); raises once ``policy.max_restarts`` is
+        exhausted or when the pool cannot shrink."""
+        attempt = 0
+        shrink_info: dict | None = None
+        while True:
+            if pool.closed:
+                raise RuntimeError("pool is shut down")
+            if pool.broken:
+                info = self._try_shrink(pool)
+                if info is None:
+                    raise ExecutorFailure(
+                        list(pool.dead_ranks),
+                        pool.broken_reason or "pool broken and shrink "
+                        "unavailable (elastic off, nothing survived, or "
+                        "below min_ranks)")
+                shrink_info = info
+            self._suspect_check(pool)
+            run_ctx = self._run_ctx(self._latest_step(), attempt,
+                                    pool.size, shrink_info)
+            try:
+                return pool.run(make_job(run_ctx),
+                                backend=backend or self.fast_backend,
+                                timeout=timeout)
+            except ExecutorFailure as e:
+                self._on_failure(e)
+                attempt += 1
+
     def run(self, make_closure: Callable[[RunContext], Callable], n: int,
             ) -> list[Any]:
         """Run ``make_closure(run_ctx)`` across ``n`` pooled executors,

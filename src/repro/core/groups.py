@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Callable, Sequence
+import pickle
+from typing import Any, Callable, Sequence
 
 Groups = tuple[tuple[int, ...], ...]
 
@@ -271,6 +272,67 @@ def remap_group(group: Sequence[int], rank_map: dict[int, int]
     dropping members that did not survive. Order (and therefore every
     ring schedule derived from the group) is preserved."""
     return tuple(rank_map[r] for r in group if r in rank_map)
+
+
+# ---------------------------------------------------------------------------
+# Dataset partition placement (``repro.data.dataset``). Placement is a pure
+# function of (partition, world size) -- every rank and the driver compute
+# the identical owner table with zero negotiation messages -- and it is
+# membership-aware by construction: after a shrink-to-survivors the same
+# formula over the new size re-homes the dead ranks' partitions onto
+# survivors, which is exactly what lineage recovery needs.
+# ---------------------------------------------------------------------------
+
+def partition_owner(part: int, nparts: int, size: int) -> int:
+    """World rank owning dataset partition ``part`` (round-robin, so a
+    shrink moves the fewest partitions and keeps load balanced)."""
+    if not 0 <= part < nparts:
+        raise ValueError(f"partition {part} out of range({nparts})")
+    if size < 1:
+        raise ValueError(f"need at least one rank, got size={size}")
+    return part % size
+
+
+def owned_partitions(rank: int, nparts: int, size: int) -> list[int]:
+    """Partitions ``rank`` owns under round-robin placement, ascending.
+    Empty when ``nparts < size`` leaves this rank without work (it still
+    participates in every shuffle collective with empty contributions)."""
+    if not 0 <= rank < size:
+        raise ValueError(f"rank {rank} out of range({size})")
+    return list(range(rank, nparts, size))
+
+
+def shuffle_rounds(nparts: int, size: int) -> int:
+    """Number of shuffle rounds every rank posts per wide stage. The
+    collectives are matched by call order, so the count must be uniform:
+    ranks owning fewer than ``shuffle_rounds`` partitions contribute
+    empty chunks in their trailing rounds."""
+    if size < 1:
+        raise ValueError(f"need at least one rank, got size={size}")
+    return -(-nparts // size)
+
+
+def lost_partitions(nparts: int, dead_old_ranks: Sequence[int],
+                    old_size: int) -> set[int]:
+    """Partitions whose materialized copy died with their previous-epoch
+    owner -- the set a post-shrink retry must recompute from lineage
+    (``shrink_info['dead_old_ranks']`` / ``['old_size']`` feed this)."""
+    dead = set(dead_old_ranks)
+    return {p for p in range(nparts)
+            if partition_owner(p, nparts, old_size) in dead}
+
+
+def stable_key_hash(key: Any) -> int:
+    """Process-stable shuffle hash of an arbitrary picklable key.
+
+    Python's builtin ``hash`` is salted per process (PYTHONHASHSEED), so
+    two executors would route the same key to different partitions;
+    blake2b over the pickle of the key gives every process -- and the
+    single-process oracle -- the identical bucket. Keys must pickle
+    deterministically (strings, ints, tuples of those all do)."""
+    blob = pickle.dumps(key, protocol=4)
+    return int.from_bytes(hashlib.blake2b(blob, digest_size=8).digest(),
+                          "big")
 
 
 ReduceFn = Callable  # (a, b) -> elementwise combine; must be associative

@@ -1,3 +1,17 @@
-from .pipeline import MemmapTokens, Prefetcher, SyntheticTokens, make_batch
+"""Data layer: deterministic training pipelines and the Spark-shaped
+partitioned-dataset runtime.
 
-__all__ = ["MemmapTokens", "Prefetcher", "SyntheticTokens", "make_batch"]
+- ``dataset``  : :class:`DataContext` / :class:`PartitionedDataset` --
+  lazy DAGs of fused narrow stages with shuffles on the runtime's own
+  collectives and per-partition lineage recovery (``docs/dataset.md``).
+- ``pipeline`` : stateless-by-step token sources
+  (:class:`SyntheticTokens`, :class:`MemmapTokens`),
+  :func:`make_batch`, :class:`Prefetcher`, and :func:`batch_shards`
+  re-expressing the shards as a dataset.
+"""
+from .dataset import DataContext, PartitionedDataset
+from .pipeline import (MemmapTokens, Prefetcher, SyntheticTokens,
+                       batch_shards, make_batch)
+
+__all__ = ["DataContext", "MemmapTokens", "PartitionedDataset",
+           "Prefetcher", "SyntheticTokens", "batch_shards", "make_batch"]

@@ -1,0 +1,850 @@
+"""Spark-shaped partitioned datasets whose shuffle rides the runtime's
+own collectives.
+
+The source paper brings MPI's peer communication *into* Spark; this
+module completes the inverse: a lazily-evaluated, partitioned dataset
+API (``parallelize / map / filter / flatMap / reduceByKey / groupByKey /
+sortByKey / collect / cache``) built *on* the MPI-shaped runtime, so
+ETL-style jobs, eval sweeps and training data prep share one world with
+training and serving.
+
+Execution model
+---------------
+A :class:`PartitionedDataset` is a node in a lazy DAG. ``collect()``
+compiles the DAG into **stages**: maximal chains of narrow ops (map /
+filter / flatMap -- partition-local, no data movement) fused into a
+single closure, separated by **wide** (shuffle) boundaries
+(reduceByKey / groupByKey / sortByKey). One pooled job evaluates every
+stage; within a wide stage the repartitioning runs on the runtime's own
+``ialltoall`` / ``ireducescatter`` between the executors' warm peer
+channels -- records never transit the driver. (A deliberately naive
+``collect(shuffle="gather")`` baseline *does* route every record
+through the driver; ``benchmarks/run.py`` gates the collectives path
+>= 2x faster.)
+
+Shuffle rounds are pipelined: the collective for map partition *k* is
+in flight while partition *k+1*'s map side computes, and the round
+count is ``groups.shuffle_rounds`` -- uniform across ranks -- so
+collective call order always matches.
+
+Lineage and elasticity
+----------------------
+Every shuffle output partition (and every ``cache()``-ed partition) is
+materialized in its owner executor's process memory, keyed by
+``(namespace, dataset uid, partition)``. Placement is the pure function
+``groups.partition_owner(part, nparts, size)``. When a rank dies
+mid-job the pool raises ``ExecutorFailure``; ``collect`` retries
+through :meth:`ClusterSupervisor.run_job`, which shrinks the pool to
+the survivors and passes ``shrink_info`` into the re-dispatched job.
+The retry then:
+
+1. **invalidates** store entries for ``groups.lost_partitions(...)``
+   derived from ``shrink_info`` (the dead ranks' partitions),
+2. **rebalances**: each wide stage starts with an ``allgather`` of
+   per-rank holdings; surviving partitions whose owner moved under the
+   new world size are shipped to their new owner in one ``alltoall``
+   instead of being recomputed,
+3. **recomputes only the truly lost partitions** from their surviving
+   parents: the map side re-runs the fused closure chain over its
+   owned parent partitions and sends buckets *only* for the lost
+   outputs.
+
+Results are bit-exact across recovery paths (and across single / local
+/ cluster modes) because every shuffle payload is tagged with its map
+partition id and merged in ascending map-partition order -- the fold
+order never depends on world size, timing, or which ranks survived.
+
+Quickstart
+----------
+::
+
+    from repro.data import DataContext
+
+    with DataContext(4, mode="cluster") as ctx:
+        lines = ctx.parallelize(open("corpus.txt").read().splitlines())
+        counts = (lines.flatMap(str.split)
+                       .map(lambda w: (w, 1))
+                       .reduceByKey(lambda a, b: a + b)
+                       .sortByKey())
+        print(counts.collect()[:10])
+
+See ``docs/dataset.md`` for the full API reference and
+``docs/architecture.md`` for where this layer sits in the runtime.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+import operator
+import os
+import tempfile
+import threading
+from typing import Any, Callable, Iterable, Sequence
+
+from ..core import groups as G
+
+__all__ = ["DataContext", "PartitionedDataset"]
+
+_SAMPLES_PER_PART = 32      # sortByKey splitter samples per map partition
+_CTX_SEQ = itertools.count()
+_UID_SEQ = itertools.count()
+
+# ---------------------------------------------------------------------------
+# Partition store: materialized partitions living in *executor process
+# memory*, surviving across pooled jobs (same pattern as train.buddy's
+# snapshot stores). Keyed (namespace, dataset uid, partition). In local
+# mode the ranks are threads of the driver, so they share one store; in
+# cluster mode each executor naturally holds only what it materialized.
+# ---------------------------------------------------------------------------
+_STORE: dict[tuple[str, str, int], list] = {}
+_STORE_LOCK = threading.Lock()
+
+
+def _store_get(key: tuple) -> list | None:
+    with _STORE_LOCK:
+        return _STORE.get(key)
+
+
+def _store_put(key: tuple, records: list) -> None:
+    with _STORE_LOCK:
+        _STORE[key] = records
+
+
+def _store_drop(ns: str, uid: str | None = None,
+                parts: Iterable[int] | None = None) -> int:
+    """Drop store entries for a namespace (optionally one dataset /
+    some partitions). Returns how many entries were dropped."""
+    pset = None if parts is None else set(parts)
+    with _STORE_LOCK:
+        doomed = [k for k in _STORE
+                  if k[0] == ns
+                  and (uid is None or k[1] == uid)
+                  and (pset is None or k[2] in pset)]
+        for k in doomed:
+            del _STORE[k]
+    return len(doomed)
+
+
+def _store_parts(ns: str, uid: str) -> list[int]:
+    """Partitions of ``uid`` materialized in this process, ascending."""
+    with _STORE_LOCK:
+        return sorted(k[2] for k in _STORE if k[0] == ns and k[1] == uid)
+
+
+# ---------------------------------------------------------------------------
+# Plan representation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _PlanNode:
+    kind: str                       # root | map | filter | flatMap | shuffle
+    uid: str
+    parent: "_PlanNode | None"
+    nparts: int
+    fn: Callable | None = None      # narrow op / reduceByKey combiner
+    how: str | None = None          # shuffle flavor
+    ascending: bool = True          # sortByKey order
+    root_kind: str | None = None    # "data" | "range"
+    data: Any = None                # driver payload ("data") or stop ("range")
+    cached: bool = False
+
+
+@dataclasses.dataclass
+class _ShuffleSpec:
+    how: str
+    fn: Callable | None
+    nparts: int
+    ascending: bool
+    uid: str
+
+
+@dataclasses.dataclass
+class _Stage:
+    """A maximal fused chain of narrow ops between two boundaries.
+
+    The input boundary is either the plan root (``root`` set) or a
+    previous stage's shuffle output (``input_uid``); the output boundary
+    is a shuffle (``out``) or -- for the final stage -- the collect
+    result itself (``out is None``)."""
+    input_uid: str | None
+    root: "_PlanNode | None"
+    in_nparts: int
+    ops: list[_PlanNode]
+    out: _ShuffleSpec | None
+
+
+def _compile(node: _PlanNode) -> list[_Stage]:
+    chain: list[_PlanNode] = []
+    n: _PlanNode | None = node
+    while n is not None:
+        chain.append(n)
+        n = n.parent
+    chain.reverse()
+    root = chain[0]
+    stages: list[_Stage] = []
+    input_uid: str | None = None
+    cur_root: _PlanNode | None = root
+    in_nparts = root.nparts
+    ops: list[_PlanNode] = []
+    for nd in chain[1:]:
+        if nd.kind == "shuffle":
+            spec = _ShuffleSpec(nd.how, nd.fn, nd.nparts, nd.ascending,
+                                nd.uid)
+            stages.append(_Stage(input_uid, cur_root, in_nparts, ops, spec))
+            input_uid, cur_root, ops = nd.uid, None, []
+            in_nparts = nd.nparts
+        else:
+            ops.append(nd)
+    stages.append(_Stage(input_uid, cur_root, in_nparts, ops, None))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Pure stage evaluation -- shared verbatim by the single-process oracle,
+# the thread runtime, the cluster executors, and the driver-gather
+# baseline, which is what makes cross-mode conformance bit-exact.
+# ---------------------------------------------------------------------------
+
+def _concat(a: list, b: list) -> list:
+    return a + b
+
+
+def _root_records(root: _PlanNode, part: int) -> list:
+    if root.root_kind == "range":
+        b = G.chunk_bounds(root.data, root.nparts)
+        return list(range(b[part], b[part + 1]))
+    b = G.chunk_bounds(len(root.data), root.nparts)
+    return list(root.data[b[part]:b[part + 1]])
+
+
+def _apply_ops(ops: Sequence[_PlanNode], records: list, ns: str | None,
+               part: int, start: int = 0) -> list:
+    """Run the fused narrow chain; ``ns`` set => tee ``cache()``-ed
+    intermediate partitions into the store as they stream past."""
+    for op in ops[start:]:
+        fn = op.fn
+        if op.kind == "map":
+            records = [fn(r) for r in records]
+        elif op.kind == "filter":
+            records = [r for r in records if fn(r)]
+        else:                       # flatMap
+            out: list = []
+            for r in records:
+                out.extend(fn(r))
+            records = out
+        if op.cached and ns is not None:
+            _store_put((ns, op.uid, part), records)
+    return records
+
+
+def _input_records(stage: _Stage, ns: str, part: int) -> list:
+    """One input partition of a stage through its fused op chain,
+    restarting from the deepest ``cache()`` hit (lineage shortcut)."""
+    for i in range(len(stage.ops) - 1, -1, -1):
+        op = stage.ops[i]
+        if op.cached:
+            hit = _store_get((ns, op.uid, part))
+            if hit is not None:
+                return _apply_ops(stage.ops, hit, ns, part, start=i + 1)
+    if stage.root is not None:
+        base = None
+        if stage.root.cached:
+            base = _store_get((ns, stage.root.uid, part))
+        if base is None:
+            base = _root_records(stage.root, part)
+            if stage.root.cached:
+                _store_put((ns, stage.root.uid, part), base)
+    else:
+        base = _store_get((ns, stage.input_uid, part))
+        if base is None:
+            raise RuntimeError(
+                f"partition {part} of boundary {stage.input_uid} is not "
+                "materialized on its owner; shuffle invariant broken")
+    return _apply_ops(stage.ops, base, ns, part)
+
+
+def _as_pairs(records: list, how: str) -> list[tuple]:
+    try:
+        return [(k, v) for k, v in records]
+    except (TypeError, ValueError):
+        raise TypeError(
+            f"{how} needs (key, value) records; got a partition whose "
+            "records do not unpack into pairs") from None
+
+
+def _partition_samples(pairs: list[tuple]) -> list:
+    """Evenly spaced key samples from one map partition (sorted keys),
+    feeding the deterministic sortByKey splitters."""
+    ks = sorted(k for k, _ in pairs)
+    if not ks:
+        return []
+    step = max(1, len(ks) // _SAMPLES_PER_PART)
+    return ks[::step][:_SAMPLES_PER_PART]
+
+
+def _splitters_from_samples(samples: list[tuple[int, list]],
+                            nparts: int) -> list:
+    """Range-partition splitters from ``(map partition, samples)`` pairs.
+    Pure function of the sample multiset, so every rank -- and every
+    execution mode -- derives the identical partitioning."""
+    keys = sorted(k for _, ks in samples for k in ks)
+    if not keys:
+        return []
+    return [keys[(i + 1) * len(keys) // nparts]
+            for i in range(nparts - 1)]
+
+
+def _bucket_of(how: str, key: Any, nparts: int, splitters: list | None,
+               ascending: bool) -> int:
+    if how == "sortByKey":
+        idx = bisect.bisect_right(splitters, key) if splitters else 0
+        return idx if ascending else nparts - 1 - idx
+    return G.stable_key_hash(key) % nparts
+
+
+def _map_buckets(spec: _ShuffleSpec, pairs: list[tuple],
+                 needed: set[int], splitters: list | None) -> dict[int, Any]:
+    """Map-side shuffle payloads for one input partition, restricted to
+    the ``needed`` output partitions (lineage-driven partial shuffle).
+    reduceByKey payloads are map-side-combined dicts; groupByKey payloads
+    are key->values dicts; sortByKey payloads are raw record lists."""
+    per: dict[int, Any] = {}
+    if spec.how == "reduceByKey":
+        fn = spec.fn
+        for k, v in pairs:
+            p = _bucket_of(spec.how, k, spec.nparts, splitters,
+                           spec.ascending)
+            if p not in needed:
+                continue
+            d = per.setdefault(p, {})
+            d[k] = fn(d[k], v) if k in d else v
+    elif spec.how == "groupByKey":
+        for k, v in pairs:
+            p = _bucket_of(spec.how, k, spec.nparts, splitters,
+                           spec.ascending)
+            if p not in needed:
+                continue
+            per.setdefault(p, {}).setdefault(k, []).append(v)
+    else:                           # sortByKey
+        for k, v in pairs:
+            p = _bucket_of(spec.how, k, spec.nparts, splitters,
+                           spec.ascending)
+            if p not in needed:
+                continue
+            per.setdefault(p, []).append((k, v))
+    return per
+
+
+def _merge_payloads(spec: _ShuffleSpec, payloads: list) -> list:
+    """Reduce-side merge of one output partition's payloads, already in
+    ascending map-partition order -- the only order-sensitive fold in
+    the system, and it is independent of world size by construction."""
+    if spec.how == "reduceByKey":
+        fn = spec.fn
+        acc: dict = {}
+        for d in payloads:
+            for k, v in d.items():
+                acc[k] = fn(acc[k], v) if k in acc else v
+        return list(acc.items())
+    if spec.how == "groupByKey":
+        gac: dict = {}
+        for d in payloads:
+            for k, vs in d.items():
+                gac.setdefault(k, []).extend(vs)
+        return list(gac.items())
+    recs = [r for pl in payloads for r in pl]
+    recs.sort(key=operator.itemgetter(0), reverse=not spec.ascending)
+    return recs
+
+
+def _merge_entries(spec: _ShuffleSpec,
+                   entries: list[tuple[int, int, Any]]) -> dict[int, list]:
+    """(out partition, map partition, payload) entries -> merged
+    partitions, folding each partition's payloads in map-partition
+    order."""
+    by_part: dict[int, list[tuple[int, Any]]] = {}
+    for p, mp, payload in entries:
+        by_part.setdefault(p, []).append((mp, payload))
+    out = {}
+    for p, plist in by_part.items():
+        plist.sort(key=operator.itemgetter(0))
+        out[p] = _merge_payloads(spec, [pl for _, pl in plist])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The per-rank plan runner (one closure per collect)
+# ---------------------------------------------------------------------------
+
+def _shuffle_stage(comm, stage: _Stage, ns: str, rank: int, size: int,
+                   lost: dict | None, stats: dict) -> None:
+    """Evaluate one wide stage: rebalance surviving partitions to their
+    (possibly re-homed) owners, agree on which output partitions are
+    missing, then recompute exactly those via pipelined collectives."""
+    spec = stage.out
+    out_uid, out_np = spec.uid, spec.nparts
+
+    # shrink_info-driven invalidation: partitions whose materialized
+    # copy died with their previous-epoch owner cannot be trusted to
+    # exist anywhere -- drop any local leftovers so the store reflects
+    # lineage truth before the holdings exchange.
+    if lost:
+        doomed = G.lost_partitions(out_np, lost["dead_old_ranks"],
+                                   lost["old_size"])
+        _store_drop(ns, out_uid, doomed)
+
+    owned = G.owned_partitions(rank, out_np, size)
+
+    # 1. holdings exchange: who has which materialized output partition
+    mine_have = _store_parts(ns, out_uid)
+    gathered = comm.allgather(mine_have) if size > 1 else [mine_have]
+
+    # 2. rebalance: a surviving partition whose owner moved (shrink
+    #    re-homed it) is shipped, not recomputed. One uniform alltoall,
+    #    skipped only when *every* rank agrees there is nothing to move.
+    holder: dict[int, int] = {}
+    for r in range(len(gathered) - 1, -1, -1):
+        for p in gathered[r]:
+            holder[p] = r
+    moves = [(p, h, G.partition_owner(p, out_np, size))
+             for p, h in sorted(holder.items())
+             if p not in gathered[G.partition_owner(p, out_np, size)]]
+    if moves and size > 1:
+        chunks: list[list] = [[] for _ in range(size)]
+        for p, h, o in moves:
+            if h == rank:
+                chunks[o].append((p, _store_get((ns, out_uid, p))))
+        for src_chunk in comm.alltoall(chunks):
+            for p, records in src_chunk:
+                _store_put((ns, out_uid, p), records)
+        stats["rebalanced"].setdefault(out_uid, []).extend(
+            sorted(p for p, _, o in moves if o == rank))
+
+    # 3. needed set: owned output partitions materialized nowhere --
+    #    exactly the lineage-lost set on a post-shrink retry, all of
+    #    them on a first run. Deterministic from the gathered holdings,
+    #    so every rank agrees without another message.
+    everywhere = set(holder)
+    need_local = sorted(set(owned) - everywhere)
+    needed = {p for p in range(out_np) if p not in everywhere}
+    if need_local:
+        stats["recomputed"].setdefault(out_uid, []).extend(need_local)
+    if not needed:
+        return
+
+    owned_in = G.owned_partitions(rank, stage.in_nparts, size)
+    rounds = G.shuffle_rounds(stage.in_nparts, size)
+
+    # sortByKey needs global splitters before any bucketing: materialize
+    # the map side once, sample each partition, allgather the samples.
+    splitters: list | None = None
+    map_cache: dict[int, list] | None = None
+    if spec.how == "sortByKey":
+        map_cache = {mp: _as_pairs(_input_records(stage, ns, mp), spec.how)
+                     for mp in owned_in}
+        samples = [(mp, _partition_samples(map_cache[mp]))
+                   for mp in owned_in]
+        allsamp = (comm.allgather(samples) if size > 1 else [samples])
+        flat = sorted((s for lst in allsamp for s in lst),
+                      key=operator.itemgetter(0))
+        splitters = _splitters_from_samples(flat, out_np)
+
+    # 4. pipelined exchange: the collective for round k is in flight
+    #    while round k+1's map side computes. reduceByKey rides
+    #    ireducescatter (fold = concatenation of per-rank entry lists,
+    #    associative); the others ride ialltoall.
+    entries: list[tuple[int, int, Any]] = []
+    reqs = []
+    for rnd in range(rounds):
+        mp = rank + rnd * size
+        per: dict[int, Any] = {}
+        if mp < stage.in_nparts:
+            pairs = (map_cache[mp] if map_cache is not None
+                     else _as_pairs(_input_records(stage, ns, mp),
+                                    spec.how))
+            per = _map_buckets(spec, pairs, needed, splitters)
+        chunks = [[] for _ in range(size)]
+        for p, payload in per.items():
+            chunks[G.partition_owner(p, out_np, size)].append(
+                (p, mp, payload))
+        if size == 1:
+            entries.extend(chunks[0])
+        elif spec.how == "reduceByKey":
+            reqs.append(comm.ireducescatter(chunks, _concat))
+        else:
+            reqs.append(comm.ialltoall(chunks))
+    for rq in reqs:
+        got = rq.wait()
+        if spec.how == "reduceByKey":
+            entries.extend(got)         # already this rank's fold
+        else:
+            for src_chunk in got:
+                entries.extend(src_chunk)
+
+    # 5. reduce-side merge in map-partition order, materialize at owner
+    for p, records in _merge_entries(spec, entries).items():
+        _store_put((ns, out_uid, p), records)
+    for p in need_local:
+        if _store_get((ns, out_uid, p)) is None:
+            _store_put((ns, out_uid, p), [])    # no records hashed here
+
+
+def _run_plan(comm, stages: list[_Stage], ns: str,
+              lost: dict | None = None) -> dict:
+    """The one closure ``collect`` dispatches: every rank walks the
+    stages in order, evaluating wide boundaries on collectives and
+    returning its owned partitions of the final stage (plus lineage
+    stats). ``comm=None`` runs the same code as the single-process
+    oracle."""
+    rank = comm.get_rank() if comm is not None else 0
+    size = comm.get_size() if comm is not None else 1
+    stats: dict = {"recomputed": {}, "rebalanced": {}, "rank": rank,
+                   "size": size}
+    for stage in stages:
+        if stage.out is not None:
+            _shuffle_stage(comm, stage, ns, rank, size, lost, stats)
+            lost = None     # consumed: later boundaries derive from store
+    final = stages[-1]
+    parts = {mp: _input_records(final, ns, mp)
+             for mp in G.owned_partitions(rank, final.in_nparts, size)}
+    return {"parts": parts, "stats": stats}
+
+
+# ---------------------------------------------------------------------------
+# Naive driver-gather baseline: every shuffle routes all raw records
+# through the driver's control plane and merges single-threaded. Same
+# pure merge functions => bit-exact with the collectives path; the
+# benchmark exists to show how much slower this is.
+# ---------------------------------------------------------------------------
+
+def _run_gather_map(comm, stage: _Stage, ns: str,
+                    boundary: dict[int, list] | None) -> Any:
+    rank = comm.get_rank() if comm is not None else 0
+    size = comm.get_size() if comm is not None else 1
+    out = {}
+    for mp in G.owned_partitions(rank, stage.in_nparts, size):
+        base = (_root_records(stage.root, mp) if stage.root is not None
+                else boundary[mp])
+        out[mp] = _apply_ops(stage.ops, base, None, mp)
+    if stage.out is None:
+        return out
+    return [(mp, _as_pairs(recs, stage.out.how))
+            for mp, recs in out.items()]
+
+
+def _merge_gathered(spec: _ShuffleSpec,
+                    raw: list[tuple[int, list]]) -> dict[int, list]:
+    """Driver-side merge of the gathered raw records: bucket with the
+    same splitter/hash math the executors use, then the same
+    map-partition-ordered fold."""
+    raw = sorted(raw, key=operator.itemgetter(0))
+    splitters = None
+    if spec.how == "sortByKey":
+        samples = [(mp, _partition_samples(pairs)) for mp, pairs in raw]
+        splitters = _splitters_from_samples(samples, spec.nparts)
+    entries = []
+    allparts = set(range(spec.nparts))
+    for mp, pairs in raw:
+        for p, payload in _map_buckets(spec, pairs, allparts,
+                                       splitters).items():
+            entries.append((p, mp, payload))
+    return _merge_entries(spec, entries)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+class PartitionedDataset:
+    """A lazy, partitioned collection of records (the paper-side RDD
+    analogue). Transformations build a DAG; ``collect()`` compiles and
+    runs it on the context's runtime. See ``docs/dataset.md``."""
+
+    def __init__(self, ctx: "DataContext", node: _PlanNode):
+        self._ctx = ctx
+        self._node = node
+
+    # -- narrow transformations (fused, no data movement) -------------------
+    def _narrow(self, kind: str, fn: Callable) -> "PartitionedDataset":
+        node = _PlanNode(kind, f"n{next(_UID_SEQ)}", self._node,
+                         self._node.nparts, fn=fn)
+        return PartitionedDataset(self._ctx, node)
+
+    def map(self, fn: Callable) -> "PartitionedDataset":
+        """Record-wise transform."""
+        return self._narrow("map", fn)
+
+    def filter(self, fn: Callable) -> "PartitionedDataset":
+        """Keep records where ``fn(record)`` is truthy."""
+        return self._narrow("filter", fn)
+
+    def flatMap(self, fn: Callable) -> "PartitionedDataset":    # noqa: N802
+        """Record -> iterable of records, flattened."""
+        return self._narrow("flatMap", fn)
+
+    # -- wide transformations (shuffle on collectives) ----------------------
+    def _wide(self, how: str, fn: Callable | None, nparts: int | None,
+              ascending: bool = True) -> "PartitionedDataset":
+        np_ = self._node.nparts if nparts is None else int(nparts)
+        if np_ < 1:
+            raise ValueError(f"need at least one partition, got {np_}")
+        node = _PlanNode("shuffle", f"n{next(_UID_SEQ)}", self._node, np_,
+                         fn=fn, how=how, ascending=ascending)
+        return PartitionedDataset(self._ctx, node)
+
+    def reduceByKey(self, fn: Callable,                         # noqa: N802
+                    nparts: int | None = None) -> "PartitionedDataset":
+        """Combine (key, value) records per key with associative ``fn``;
+        map-side combining runs before any byte moves."""
+        return self._wide("reduceByKey", fn, nparts)
+
+    def groupByKey(self,                                        # noqa: N802
+                   nparts: int | None = None) -> "PartitionedDataset":
+        """(key, value) records -> (key, [values]) in deterministic
+        (map-partition, record) order."""
+        return self._wide("groupByKey", None, nparts)
+
+    def sortByKey(self, ascending: bool = True,                 # noqa: N802
+                  nparts: int | None = None) -> "PartitionedDataset":
+        """Globally sort (key, value) records via deterministic sampled
+        range partitioning; ties keep their pre-sort order."""
+        return self._wide("sortByKey", None, nparts, ascending=ascending)
+
+    # -- persistence / actions ----------------------------------------------
+    def cache(self) -> "PartitionedDataset":
+        """Materialize this dataset's partitions in executor memory on
+        first evaluation; later collects (and lineage recoveries) start
+        from the cached copies instead of recomputing upstream."""
+        self._node.cached = True
+        return self
+
+    @property
+    def nparts(self) -> int:
+        return self._node.nparts
+
+    def lineage(self) -> list[dict]:
+        """Root-to-here plan description -- uids here match the
+        ``recomputed`` / ``rebalanced`` stats on ``ctx.last_stats``."""
+        chain = []
+        n: _PlanNode | None = self._node
+        while n is not None:
+            chain.append({"uid": n.uid, "kind": n.kind,
+                          "how": n.how, "nparts": n.nparts,
+                          "cached": n.cached})
+            n = n.parent
+        return list(reversed(chain))
+
+    def collect(self, shuffle: str = "collectives") -> list:
+        """Evaluate the DAG and return every record, partitions
+        concatenated in order. ``shuffle="gather"`` selects the naive
+        driver-relay baseline (benchmarks only; no lineage recovery)."""
+        if shuffle not in ("collectives", "gather"):
+            raise ValueError(f"unknown shuffle mode {shuffle!r}")
+        stages = _compile(self._node)
+        if shuffle == "gather":
+            parts = self._ctx._collect_gather(stages)
+        else:
+            parts = self._ctx._collect_collectives(stages)
+        out: list = []
+        for p in range(stages[-1].in_nparts):
+            out.extend(parts.get(p, []))
+        return out
+
+    def count(self) -> int:
+        return len(self.collect())
+
+    def take(self, n: int) -> list:
+        """First ``n`` records (evaluates the full plan; convenience)."""
+        return self.collect()[:n]
+
+
+class DataContext:
+    """Owns the world a dataset evaluates on: ``mode`` is ``"single"``
+    (in-process oracle), ``"local"`` (threads), or ``"cluster"``
+    (pooled executor processes with shrink-to-survivors lineage
+    recovery). Usable as a context manager; ``close()`` releases the
+    pool and this context's cached partitions."""
+
+    def __init__(self, n: int = 2, mode: str = "local", *,
+                 backend: str = "ring", timeout: float = 60.0,
+                 max_restarts: int = 4, min_ranks: int = 1,
+                 pool: Any = None, hb_interval: float = 0.1,
+                 hb_timeout: float = 2.0):
+        if mode not in ("single", "local", "cluster"):
+            raise ValueError(
+                f"unknown mode {mode!r}; expected single|local|cluster")
+        if n < 1:
+            raise ValueError("need at least one rank")
+        self.n = int(n)
+        self.mode = mode
+        self.backend = backend
+        self.timeout = timeout
+        self.max_restarts = max_restarts
+        self.min_ranks = min_ranks
+        self.hb_interval = hb_interval
+        self.hb_timeout = hb_timeout
+        self._ns = f"ds{os.getpid():x}.{next(_CTX_SEQ)}"
+        self._pool = pool
+        self._pool_external = pool is not None
+        self._sup = None
+        self._closed = False
+        #: lineage stats of the most recent collectives collect:
+        #: {"recomputed": {uid: [parts]}, "rebalanced": {...},
+        #:  "shrinks": int, "world_size": int}
+        self.last_stats: dict | None = None
+
+    # -- plumbing -----------------------------------------------------------
+    def __enter__(self) -> "DataContext":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        _store_drop(self._ns)
+        if self._pool is not None and not self._pool_external:
+            self._pool.shutdown()
+        self._pool = None
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("DataContext is closed")
+
+    def _ensure_pool(self):
+        from ..core.cluster import ExecutorPool
+        if self._pool is None:
+            self._pool = ExecutorPool(
+                self.n, backend=self.backend, timeout=self.timeout,
+                hb_interval=self.hb_interval, hb_timeout=self.hb_timeout)
+        return self._pool
+
+    # -- dataset constructors -----------------------------------------------
+    def parallelize(self, data: Sequence,
+                    nparts: int | None = None) -> PartitionedDataset:
+        """Slice a driver-side sequence into ``nparts`` partitions
+        (default: the context's world size)."""
+        self._check_open()
+        np_ = self.n if nparts is None else int(nparts)
+        if np_ < 1:
+            raise ValueError(f"need at least one partition, got {np_}")
+        node = _PlanNode("root", f"n{next(_UID_SEQ)}", None, np_,
+                         root_kind="data", data=list(data))
+        return PartitionedDataset(self, node)
+
+    def range(self, stop: int,
+              nparts: int | None = None) -> PartitionedDataset:
+        """``range(stop)`` as a dataset. The root is regenerated
+        executor-side from the bounds alone -- nothing ships from the
+        driver -- which is the right base for synthetic/ETL pipelines."""
+        self._check_open()
+        np_ = self.n if nparts is None else int(nparts)
+        if np_ < 1:
+            raise ValueError(f"need at least one partition, got {np_}")
+        node = _PlanNode("root", f"n{next(_UID_SEQ)}", None, np_,
+                         root_kind="range", data=int(stop))
+        return PartitionedDataset(self, node)
+
+    # -- execution ----------------------------------------------------------
+    def _collect_collectives(self, stages: list[_Stage]) -> dict[int, list]:
+        self._check_open()
+        ns = self._ns
+        if self.mode == "single":
+            res = _run_plan(None, stages, ns)
+            self.last_stats = {**res["stats"], "shrinks": 0,
+                               "world_size": 1}
+            return res["parts"]
+        if self.mode == "local":
+            from ..core.local import ParallelFuncRDD
+            closure = lambda comm: _run_plan(comm, stages, ns)  # noqa: E731
+            outs = ParallelFuncRDD(closure, timeout=self.timeout,
+                                   backend=self.backend).execute(self.n)
+            return self._fold_outs(outs, shrinks=0)
+        return self._collect_cluster(stages)
+
+    def _collect_cluster(self, stages: list[_Stage]) -> dict[int, list]:
+        from ..core.cluster import ClusterSupervisor
+        from ..train import ft
+        pool = self._ensure_pool()
+        if self._sup is None:
+            self._sup = ClusterSupervisor(
+                ckpt_dir=os.path.join(
+                    tempfile.gettempdir(), f"mpignite-{self._ns}-ckpt"),
+                policy=ft.RecoveryPolicy(max_restarts=self.max_restarts),
+                fast_backend=self.backend, timeout=self.timeout,
+                elastic=True, min_ranks=self.min_ranks)
+        ns = self._ns
+        shrinks0 = self._sup.state.shrinks
+
+        def make_job(run_ctx):
+            lost = None
+            if run_ctx.shrink_info is not None:
+                info = run_ctx.shrink_info
+                lost = {"dead_old_ranks": list(info["dead_old_ranks"]),
+                        "old_size": info["old_size"]}
+            return lambda comm: _run_plan(comm, stages, ns, lost=lost)
+
+        outs = self._sup.run_job(make_job, pool, timeout=self.timeout)
+        return self._fold_outs(outs,
+                               shrinks=self._sup.state.shrinks - shrinks0)
+
+    def _fold_outs(self, outs: list, shrinks: int) -> dict[int, list]:
+        parts: dict[int, list] = {}
+        stats = {"recomputed": {}, "rebalanced": {}}
+        for res in outs:
+            parts.update(res["parts"])
+            for kind in ("recomputed", "rebalanced"):
+                for uid, ps in res["stats"][kind].items():
+                    stats[kind].setdefault(uid, []).extend(ps)
+        for kind in ("recomputed", "rebalanced"):
+            stats[kind] = {uid: sorted(ps)
+                           for uid, ps in stats[kind].items()}
+        stats["shrinks"] = shrinks
+        stats["world_size"] = len(outs)
+        self.last_stats = stats
+        return parts
+
+    def _execute_gather(self, closure: Callable) -> list:
+        if self.mode == "single":
+            return [closure(None)]
+        if self.mode == "local":
+            from ..core.local import ParallelFuncRDD
+            return ParallelFuncRDD(closure, timeout=self.timeout,
+                                   backend=self.backend).execute(self.n)
+        return self._ensure_pool().run(closure, timeout=self.timeout)
+
+    def _collect_gather(self, stages: list[_Stage]) -> dict[int, list]:
+        self._check_open()
+        ns = self._ns
+        boundary: dict[int, list] | None = None
+        for stage in stages:
+            st, cap = stage, boundary
+
+            def closure(comm, st=st, cap=cap):
+                return _run_gather_map(comm, st, ns, cap)
+
+            outs = self._execute_gather(closure)
+            if stage.out is None:
+                parts: dict[int, list] = {}
+                for out in outs:
+                    parts.update(out)
+                return parts
+            raw = [entry for out in outs for entry in out]
+            boundary = _merge_gathered(stage.out, raw)
+            for p in range(stage.out.nparts):
+                boundary.setdefault(p, [])
+        raise AssertionError("unreachable: compile always emits a final "
+                             "stage")
+
+    def clear_cache(self) -> None:
+        """Drop every partition this context materialized (all ranks +
+        driver); the next collect recomputes from the roots."""
+        self._check_open()
+        ns = self._ns
+        _store_drop(ns)
+        if self.mode == "cluster" and self._pool is not None:
+            self._pool.run(lambda comm: _store_drop(ns),
+                           timeout=self.timeout)

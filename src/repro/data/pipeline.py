@@ -8,7 +8,10 @@ the checkpoint, and any host can compute any shard's slice. Sources:
 - ``SyntheticTokens``: Philox-keyed synthetic stream (benchmarks, tests).
 - ``MemmapTokens``: fixed binary token file, block-shuffled by step.
 
-``Prefetcher`` overlaps host batch assembly with device compute.
+``Prefetcher`` overlaps host batch assembly with device compute, and
+``batch_shards`` re-expresses the whole pipeline as a
+``data.dataset.PartitionedDataset`` so training-data prep shares the
+shuffle/lineage runtime with ETL and eval sweeps.
 """
 from __future__ import annotations
 
@@ -66,6 +69,27 @@ def make_batch(cfg: ModelConfig, source, step: int) -> dict:
         batch["image_emb"] = rng.standard_normal(
             (B, cfg.n_image_tokens, cfg.vision_d)).astype(np.float32) * 0.02
     return batch
+
+
+def batch_shards(ctx, cfg: ModelConfig, source, steps: int,
+                 nparts: int | None = None, start_step: int = 1):
+    """The tokenized training shards as a ``PartitionedDataset`` of
+    ``(step, batch_dict)`` records over ``DataContext`` ``ctx``.
+
+    Because every source is *stateless by step* (``batch(step)`` is a
+    pure function of ``(seed, step)``), the dataset's root is nothing
+    but the step ids: each rank assembles its own shard locally, no
+    batch bytes ship from the driver, and a shard partition lost to
+    rank death recomputes from the step range alone -- lineage recovery
+    for free. Downstream ``filter``/``map``/``groupByKey`` stages turn
+    the same object into ETL or eval-sweep inputs.
+
+    Note: ``MemmapTokens`` pickles by materializing its array; prefer
+    opening the memmap inside a ``map`` closure (or use
+    ``SyntheticTokens``) for cluster-mode shards."""
+    ds = ctx.parallelize(list(range(start_step, start_step + steps)),
+                         nparts)
+    return ds.map(lambda step: (step, make_batch(cfg, source, step)))
 
 
 class Prefetcher:

@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Link-check the docs so pointers cannot rot silently.
+
+Scans ``docs/*.md`` and ``README.md`` for
+
+- markdown links ``[text](target)`` with non-http targets: the file
+  must exist relative to the *containing* document, and a ``#anchor``
+  must match a heading in the target (GitHub slugification, including
+  the ``-1``/``-2`` suffixes for duplicate headings);
+- backticked source pointers like ``src/repro/core/matching.py`` or
+  ``tests/test_dataset.py:42``: the file must exist relative to the
+  repo root (a trailing ``:line`` is stripped).
+
+Exits nonzero with a per-problem report; CI's ``docs`` job runs it.
+Run locally: ``python tools/check_docs.py``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backticked repo paths: anchored to the top-level dirs that hold code
+# and docs, requiring an extension so prose like `docs/` stays prose
+SRC_POINTER = re.compile(
+    r"`((?:src|tests|benchmarks|examples|docs|tools|\.github)"
+    r"/[\w./-]+\.(?:py|md|yml|yaml|toml|json))(?::\d+)?`")
+FENCE = re.compile(r"^(```|~~~)")
+HEADING = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def strip_markup(text: str) -> str:
+    """Heading text -> the visible text GitHub slugifies."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # links -> text
+    text = text.replace("`", "")
+    text = re.sub(r"[*_]{1,2}([^*_]+)[*_]{1,2}", r"\1", text)
+    return text.strip()
+
+
+def github_slug(heading: str) -> str:
+    text = strip_markup(heading).lower()
+    text = re.sub(r"[^\w\- ]", "", text)        # drop punctuation
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def doc_lines(path: Path):
+    """(lineno, line) pairs with fenced code blocks masked out for the
+    markdown-link pass (pointer scan runs on everything)."""
+    in_fence = False
+    for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if FENCE.match(line.strip()):
+            in_fence = not in_fence
+            yield i, "", line
+            continue
+        yield i, ("" if in_fence else line), line
+
+
+def check_file(path: Path) -> list[str]:
+    problems: list[str] = []
+    rel = path.relative_to(REPO)
+    for lineno, prose, raw in doc_lines(path):
+        for m in MD_LINK.finditer(prose):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, frag = target.partition("#")
+            dest = path if not base else (path.parent / base).resolve()
+            if not dest.exists():
+                problems.append(f"{rel}:{lineno}: broken link "
+                                f"({target}): no such file {base}")
+                continue
+            if frag:
+                if dest.suffix != ".md":
+                    problems.append(f"{rel}:{lineno}: anchor on "
+                                    f"non-markdown target ({target})")
+                elif frag not in anchors_of(dest):
+                    problems.append(f"{rel}:{lineno}: broken anchor "
+                                    f"({target}): no heading "
+                                    f"slugs to #{frag}")
+        for m in SRC_POINTER.finditer(raw):
+            pointer = m.group(1)
+            if not (REPO / pointer).exists():
+                problems.append(f"{rel}:{lineno}: dangling source "
+                                f"pointer `{pointer}`")
+    return problems
+
+
+def main() -> int:
+    targets = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    missing = [t for t in targets if not t.exists()]
+    if missing:
+        print(f"check_docs: missing inputs: {missing}", file=sys.stderr)
+        return 2
+    problems = [p for t in targets for p in check_file(t)]
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s):", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    n = len(targets)
+    print(f"check_docs: ok ({n} files, all links and pointers resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
