@@ -54,6 +54,7 @@ from typing import Any, Callable
 from ..matching import env_segment_bytes
 from ..obs.log import get_logger
 from ..obs.trace import JobTrace, trace_enabled
+from . import shm as shm_transport
 from . import wire
 from .launcher import ExecutorSpec, ForkLauncher, Launcher
 from .serializer import dumps_closure
@@ -121,7 +122,8 @@ class ExecutorPool:
                  launcher: Launcher | None = None,
                  bind_host: str = "127.0.0.1",
                  advertise_host: str | None = None,
-                 secret: bytes | str | None = None):
+                 secret: bytes | str | None = None,
+                 shm: bool | None = None):
         if n < 1:
             raise ValueError("cluster mode needs at least one executor")
         if data_plane not in ("direct", "relay"):
@@ -129,6 +131,13 @@ class ExecutorPool:
                              "expected 'direct' or 'relay'")
 
         self.n = n
+        #: whether the broker publishes the shared-memory transport map
+        #: (None resolves $MPIGNITE_SHM, default on). Executors create
+        #: and advertise their ring segments regardless -- disabling
+        #: here just means the broker never matches same-host pairs, so
+        #: every send rides TCP (the benchmark's comparison baseline).
+        self.shm = ((shm_transport.enabled() if shm is None else bool(shm))
+                    and data_plane == "direct")
         self.backend = backend
         self.timeout = timeout
         self.data_plane = data_plane
@@ -218,6 +227,11 @@ class ExecutorPool:
         self._conn_dead = [False] * n
         self._peer_rx_seen: dict[tuple[int, int], int] = {}
         self._data_addrs: list[tuple[str, int] | None] = [None] * n
+        #: each slot's advertised shm segment as (name, host_token), or
+        #: None. The driver owns these names' lifecycle: they are
+        #: unlinked when the slot dies, shrinks away, or the pool shuts
+        #: down -- a SIGKILL'd rank can therefore never leak /dev/shm.
+        self._shm_info: list[tuple[str, str] | None] = [None] * n
         #: latest heartbeat round-trip time per rank (None until the
         #: first hb/hb_ack exchange completes)
         self._rank_rtt: list[float | None] = [None] * n
@@ -345,6 +359,7 @@ class ExecutorPool:
                 if self._conns[rank] is not None:
                     raise wire.AuthError(f"rank {rank} already registered")
                 self._data_addrs[rank] = (addr[0], addr[1]) if addr else None
+                self._shm_info[rank] = self._hello_shm(header)
                 self._last_seen[rank] = time.time()
                 self.frame_counts["hello"] += 1
                 # publish the connection last: the bootstrap loop treats
@@ -411,6 +426,27 @@ class ExecutorPool:
             except OSError:
                 pass
 
+    @staticmethod
+    def _hello_shm(header: dict) -> tuple[str, str] | None:
+        """A hello's advertised shm segment, validated: both fields must
+        be strings and the segment name must carry the transport prefix
+        (the hello is MAC-bound, so this is shape-checking, not auth)."""
+        seg, host = header.get("shm_seg"), header.get("shm_host")
+        if (isinstance(seg, str) and isinstance(host, str)
+                and seg.startswith(shm_transport.SEG_PREFIX)):
+            return (seg, host)
+        return None
+
+    def _unlink_shm(self, slots) -> None:
+        """Reap the named slots' shm segments (idempotent; the driver is
+        the sole owner of segment names)."""
+        for s in slots:
+            info = self._shm_info[s] if 0 <= s < len(self._shm_info) \
+                else None
+            if info is not None and shm_transport.unlink(info[0]):
+                _log.bound(world=len(self._world)).debug(
+                    "unlinked shm segment %s of slot %d", info[0], s)
+
     # -- elastic membership -------------------------------------------------
     @property
     def size(self) -> int:
@@ -436,6 +472,17 @@ class ExecutorPool:
                      for w, s in enumerate(self._world)}
         note = {"kind": "peers", "addrs": addrs,
                 "mepoch": self.membership_epoch}
+        if self.shm:
+            # the shm tier's routing table: per world rank, the host
+            # token (senders compare against their own), the inbound
+            # segment name, and the *stable slot* (the ring index a
+            # sender uses in every receiver's segment -- slots never
+            # renumber, so attachments survive re-brokering)
+            note["shm"] = {
+                str(w): {"seg": self._shm_info[s][0],
+                         "host": self._shm_info[s][1], "slot": s}
+                for w, s in enumerate(self._world)
+                if self._shm_info[s] is not None}
         for s in self._world:
             self._out_qs[s].put((note, b""))
 
@@ -494,6 +541,7 @@ class ExecutorPool:
                 self._conn_dead.append(False)
                 self._data_addrs.append((addr[0], addr[1]) if addr
                                         else None)
+                self._shm_info.append(self._hello_shm(header))
                 self._rank_rtt.append(None)
                 self._handles.append(
                     self._claim_join_handle(header.get("pid")))
@@ -577,6 +625,7 @@ class ExecutorPool:
                     self._handles[s].join(timeout=0.5)
                 except Exception:   # noqa: BLE001 - best effort
                     pass
+            self._unlink_shm(info["dead_slots"])    # nor /dev/shm names
             self._broker_peers()
             _log.bound(world=len(survivors)).warning(
                 "shrunk to survivors %s (epoch %d; lost %s)", survivors,
@@ -686,14 +735,22 @@ class ExecutorPool:
                             self._peer_rx_seen[k] = count
                             self._last_seen[int(src)] = time.time()
                 elif kind == "trace":
-                    # per-rank trace snapshot, flushed just before the
-                    # result frame on the same (ordered) control socket,
-                    # so it is always stored by the time run() returns
+                    # per-rank trace snapshot: the final flush arrives
+                    # just before the result frame on the same (ordered)
+                    # control socket, so it is always stored by the time
+                    # run() returns -- and traced executors also stream
+                    # cumulative snapshots mid-job (trace_flush_interval),
+                    # each replacing the previous, so a partial JobTrace
+                    # is published immediately: a hung, SIGSTOPped or
+                    # killed job still leaves its spans on last_trace.
                     with self._lock:
                         wr = self._wrank.get(rank)
                         if header.get("job") == self._cur_job \
                                 and wr is not None:
                             self._trace_snaps[wr] = wire.decode(payload)
+                            self.last_trace = JobTrace(
+                                self._cur_job, len(self._world),
+                                dict(self._trace_snaps))
                 elif kind == "result":
                     with self._lock:
                         wr = self._wrank.get(rank)
@@ -745,6 +802,10 @@ class ExecutorPool:
         self.broken = True
         self.dead_ranks = sorted(set(self.dead_ranks) | set(dead))
         self.broken_reason = self.broken_reason or reason
+        # reap the dead ranks' shm segments now: a SIGKILL'd process
+        # cannot unlink its own advertisement, and survivors keep any
+        # mapping they already hold (unlink removes the name, not maps)
+        self._unlink_shm(sorted(set(dead)))
         # tell the survivors before raising: their blocked receives and
         # in-flight nonblocking requests must fail with PeerDeadError
         # now, not hang out their full receive timeouts
@@ -927,6 +988,10 @@ class ExecutorPool:
             self._server.close()
         except OSError:
             pass
+        # every advertised segment dies with the pool -- normal exits
+        # close their own maps, and the unlink here guarantees the
+        # *names* are gone even for ranks that had to be terminated
+        self._unlink_shm(range(len(self._shm_info)))
         if self._secret_path is not None:
             try:
                 os.unlink(self._secret_path)
@@ -952,7 +1017,8 @@ def get_pool(n: int, backend: str = "linear", data_plane: str = "direct",
              timeout: float = 60.0, hb_interval: float = 0.1,
              hb_timeout: float = 2.0, launcher: Launcher | None = None,
              bind_host: str = "127.0.0.1", advertise_host: str | None = None,
-             secret: bytes | str | None = None) -> ExecutorPool:
+             secret: bytes | str | None = None,
+             shm: bool | None = None) -> ExecutorPool:
     """The warm pool for this transport configuration -- created on
     first use, replaced transparently if a failure broke the cached one.
     The backend is deliberately *not* part of the key: it is a per-job
@@ -967,8 +1033,13 @@ def get_pool(n: int, backend: str = "linear", data_plane: str = "direct",
     launcher_key = (launcher if launcher is not None
                     else ForkLauncher()).cache_key()
     secret_key = wire.load_secret(secret)
+    # shm participates in the key *resolved* (None -> the env default),
+    # so a benchmark holding one shm-on and one shm-off pool warm at
+    # the same time gets two distinct worlds, while callers passing
+    # None and the matching explicit value share one.
+    shm_key = shm_transport.enabled() if shm is None else bool(shm)
     key = (n, data_plane, launcher_key, bind_host, advertise_host,
-           secret_key)
+           secret_key, shm_key)
     with _POOLS_LOCK:
         pool = _POOLS.get(key)
         if pool is not None and not (pool.broken or pool.closed):
@@ -979,7 +1050,8 @@ def get_pool(n: int, backend: str = "linear", data_plane: str = "direct",
                             data_plane=data_plane, hb_interval=hb_interval,
                             hb_timeout=hb_timeout, launcher=launcher,
                             bind_host=bind_host,
-                            advertise_host=advertise_host, secret=secret)
+                            advertise_host=advertise_host, secret=secret,
+                            shm=shm)
         _POOLS[key] = pool
         return pool
 

@@ -55,12 +55,18 @@ from typing import Any
 from ..matching import Mailbox, MessageComm, ProgressEngine
 from ..obs.log import get_logger
 from ..obs.metrics import ChannelStats
-from ..obs.trace import Tracer
+from ..obs.trace import Tracer, trace_flush_interval
+from . import shm as shm_transport
 from . import wire
 from .serializer import loads_closure
 
 #: ChannelStats peer id for the driver's control connection
 DRIVER_PEER = -1
+
+#: shm fragment envelope (first byte of every ring record): frames
+#: larger than one ring record are split by the sender and reassembled
+#: by the receiver's read loop, so frame size never picks the transport
+_SHM_WHOLE, _SHM_FIRST, _SHM_MID, _SHM_LAST = 0, 1, 2, 3
 
 
 class ExecutorChannel:
@@ -71,13 +77,34 @@ class ExecutorChannel:
     def __init__(self, sock: socket.socket, rank: int, hb_interval: float,
                  data_plane: str = "direct",
                  data_server: socket.socket | None = None,
-                 host: str = "127.0.0.1", secret: bytes = b""):
+                 host: str = "127.0.0.1", secret: bytes = b"",
+                 shm_rings: "shm_transport.ShmRings | None" = None):
         self.sock = sock
         self.rank = rank
         self.host = host
         self.secret = secret
         self.data_plane = data_plane
         self.wlock = threading.Lock()
+        #: this rank's own inbound shared-memory segment (None = the
+        #: shm tier is off; everything rides TCP as before)
+        self.shm = shm_rings
+        #: world rank -> (segment name, ring index = our stable slot)
+        #: for peers the broker matched to this host
+        self._shm_peers: dict[int, tuple[str, int]] = {}
+        #: attached remote segments, by name (attachments survive
+        #: re-brokering: slot numbering is stable across epochs)
+        self._shm_attach: dict[str, shm_transport.ShmRings] = {}
+        #: world ranks permanently demoted to TCP (attach/write failure,
+        #: or an oversized record): per-key FIFO delivery only holds if
+        #: a pair never interleaves transports, so the demotion sticks
+        #: until the next re-broker
+        self._shm_tcp_only: set[int] = set()
+        self._shm_lock = threading.Lock()
+        # one producer lock per destination rank: a ring is SPSC, but a
+        # job thread and its ProgressEngine can both send to the same
+        # peer (the TCP path serializes on the per-socket lock; this is
+        # the shm equivalent)
+        self._shm_tx_locks: dict[int, threading.Lock] = {}
         # one mailbox per job id: structural isolation between jobs, and
         # a GC boundary -- stray messages a misbehaved job left behind
         # are dropped when their job's mailbox is purged at a later
@@ -129,6 +156,9 @@ class ExecutorChannel:
         self._data_server = data_server
         if data_server is not None:
             threading.Thread(target=self._accept_loop, daemon=True).start()
+        if shm_rings is not None:
+            threading.Thread(target=self._shm_read_loop,
+                             daemon=True).start()
         self._reader = threading.Thread(target=self._read_loop, daemon=True)
         self._reader.start()
         self._hb = threading.Thread(target=self._hb_loop, daemon=True)
@@ -230,6 +260,7 @@ class ExecutorChannel:
         rebrokered = mepoch != self.mepoch
         self.mepoch = mepoch
         self.peer_addrs = addrs
+        self._apply_shm_peers(header.get("shm") or {})
         if rebrokered:
             with self._peer_lock:
                 self._peer_backoff.clear()
@@ -243,6 +274,181 @@ class ExecutorChannel:
             with self._mb_lock:
                 self._peer_dead = None      # the new world is healthy
         self.peers_ready.set()
+
+    # -- shared-memory data plane -------------------------------------------
+    def _apply_shm_peers(self, shm_map: dict) -> None:
+        """Install the broker's shm table: for every peer world rank on
+        *this* host, remember its segment name and the ring index this
+        rank must write (its own stable slot -- rings are SPSC per
+        directed pair). Re-brokering resets TCP demotions: the new
+        epoch's first send re-probes shm."""
+        if self.shm is None:
+            return
+        token = shm_transport.host_token()
+        me = None
+        for info in shm_map.values():
+            if info.get("seg") == self.shm.name:
+                me = int(info["slot"])
+        peers: dict[int, tuple[str, int]] = {}
+        if me is not None:
+            for wr, info in shm_map.items():
+                seg = info.get("seg")
+                if (info.get("host") == token and seg
+                        and seg != self.shm.name):
+                    peers[int(wr)] = (seg, me)
+        with self._shm_lock:
+            self._shm_peers = peers
+            self._shm_tcp_only.clear()
+
+    def _shm_attachment(self, seg: str
+                        ) -> "shm_transport.ShmRings | None":
+        got = self._shm_attach.get(seg)
+        if got is not None:
+            return got
+        with self._shm_lock:
+            got = self._shm_attach.get(seg)
+            if got is None:
+                got = self._shm_attach[seg] = shm_transport.ShmRings.attach(
+                    seg)
+            return got
+
+    def _shm_send(self, dst_world: int, header: dict,
+                  parts: list[bytes], tracer) -> bool:
+        """Try the shared-memory fast path; False => caller uses TCP.
+        Any *failure* demotes the pair to TCP until the next re-broker,
+        so one (ctx, tag, src) key never interleaves transports (which
+        could reorder same-key messages across the two reader threads).
+        Frames larger than a ring record are fragmented through the
+        ring rather than spilled to TCP, for the same reason: size must
+        not decide the transport, or a big send and its small same-tag
+        successor could arrive through different readers out of order."""
+        with self._shm_lock:
+            route = self._shm_peers.get(dst_world)
+            demoted = dst_world in self._shm_tcp_only
+            tx_lock = self._shm_tx_locks.setdefault(dst_world,
+                                                    threading.Lock())
+        if route is None or demoted:
+            return False
+        seg_name, ring = route
+        try:
+            rings = self._shm_attachment(seg_name)
+            record = wire.pack_frame(header, parts)
+            t0 = 0 if tracer is None else tracer.now()
+            limit = rings.max_record() - 1     # 1-byte fragment envelope
+            with tx_lock:
+                if len(record) <= limit:
+                    ok = rings.write(ring, bytes((_SHM_WHOLE,)) + record)
+                else:
+                    ok = True
+                    for off in range(0, len(record), limit):
+                        if off == 0:
+                            flag = _SHM_FIRST
+                        elif off + limit >= len(record):
+                            flag = _SHM_LAST
+                        else:
+                            flag = _SHM_MID
+                        ok = rings.write(
+                            ring, bytes((flag,)) + record[off:off + limit])
+                        if not ok:
+                            break
+            if not ok:
+                raise ConnectionError(
+                    f"ring {ring} rejected a {len(record)}-byte record")
+            if tracer is not None:
+                tracer.complete("shm.write", "wire", t0,
+                                args={"dst": dst_world,
+                                      "nbytes": len(record)})
+        except (ConnectionError, OSError, ValueError) as e:
+            self._log.warning("shm send to rank %d failed (%s); using "
+                              "TCP until the next re-broker",
+                              dst_world, e)
+            with self._shm_lock:
+                self._shm_tcp_only.add(dst_world)
+            return False
+        self.stats.on_tx(dst_world, len(record), shm=True)
+        return True
+
+    def _shm_read_loop(self):
+        """Drain every ring of this rank's own segment into the mailbox.
+        Records are whole wire frames, so decode and delivery are
+        identical to the socket readers; the ring index is the sender's
+        stable slot, which is the same identity the TCP readers count
+        ``_rx_counts`` under (heartbeat vouching keeps working).
+
+        ``try_read`` never raises: a record whose pages are not yet
+        visible (or that a dead producer half-wrote) just reads as None
+        until the checksum passes, so this loop never abandons the
+        transport -- at worst one ring idles until the next re-broker
+        retires it."""
+        rings = self.shm
+        frag: dict[int, bytearray] = {}     # slot -> partial frame
+        delay = 0.0
+        while not self.exit_requested.is_set():
+            got = False
+            for slot in range(rings.nrings):
+                rec = rings.try_read(slot)
+                if rec is None:
+                    continue
+                got = True
+                with self._rx_lock:
+                    self._rx_counts[slot] = (self._rx_counts.get(slot, 0)
+                                             + len(rec))
+                flag = rec[0] if rec else -1
+                if flag == _SHM_WHOLE:
+                    frame = rec[1:]
+                elif flag == _SHM_FIRST:
+                    frag[slot] = bytearray(memoryview(rec)[1:])
+                    continue
+                elif flag in (_SHM_MID, _SHM_LAST):
+                    buf = frag.get(slot)
+                    if buf is None:     # stale tail of an aborted frame
+                        self._log.warning("dropping orphan shm fragment "
+                                          "from slot %d", slot)
+                        continue
+                    buf += memoryview(rec)[1:]
+                    if flag == _SHM_MID:
+                        continue
+                    frame = bytes(frag.pop(slot))
+                else:
+                    self._log.warning("dropping malformed shm record "
+                                      "from slot %d (envelope %r)",
+                                      slot, flag)
+                    continue
+                try:
+                    header, payload = wire.unpack_frame(frame)
+                except ValueError as e:
+                    self._log.warning("dropping malformed shm frame "
+                                      "from slot %d: %s", slot, e)
+                    continue
+                if header.get("kind") == "msg":
+                    src = header["src"]
+                    self.stats.on_rx(src, len(frame), shm=True)
+                    job = header.get("job", 0)
+                    self.mailbox_for(job).put(
+                        header["ctx"], header["tag"], src,
+                        self._decode(payload, job, "shm"))
+            if got:
+                delay = 0.0
+            else:
+                # adaptive poll: spin while traffic flows, ramp to a
+                # deep 20ms idle backoff. The ceiling matters: unlike
+                # the blocking TCP readers, this thread pays for idle
+                # time, and a host can hold many warm-but-quiescent
+                # pools (the cached-pool pattern) whose polling must
+                # cost ~nothing. Active rings reset the delay to zero,
+                # so the ceiling is only ever paid by the first record
+                # after a long quiet spell.
+                time.sleep(delay)
+                delay = min(0.02, delay + 0.0002)
+        rings.close()
+
+    def close_shm(self):
+        with self._shm_lock:
+            attached = list(self._shm_attach.values())
+            self._shm_attach.clear()
+            self._shm_peers.clear()
+        for rings in attached:
+            rings.close()
 
     # -- control plane ------------------------------------------------------
     def _read_loop(self):
@@ -448,6 +654,9 @@ class ExecutorChannel:
             tracer.complete("wire.encode", "wire", t0,
                             args={"dst": dst_world})
         if self.data_plane == "direct":
+            if (self.shm is not None
+                    and self._shm_send(dst_world, header, parts, tracer)):
+                return
             peer = self._peer_channel(dst_world, tracer)
             if peer is not None:
                 sock, lock = peer
@@ -595,9 +804,22 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
         data_host = sock.getsockname()[0]
     else:
         data_host = bind_host
+    # the shm tier: create this rank's inbound ring segment *before* the
+    # hello so its name travels in the MAC-bound registration. Creation
+    # failure (no /dev/shm, exotic platform) silently means TCP-only.
+    shm_rings = None
+    if data_plane == "direct" and shm_transport.enabled():
+        try:
+            shm_rings = shm_transport.ShmRings.create(
+                nrings=max(size, 1) + 8)
+        except (OSError, ValueError):
+            shm_rings = None
     hello = {"kind": "hello", "rank": rank, "pid": os.getpid(),
              "data_addr": ([data_host, data_port]
                            if data_port is not None else None)}
+    if shm_rings is not None:
+        hello["shm_seg"] = shm_rings.name
+        hello["shm_host"] = shm_transport.host_token()
     if joining:
         hello["join"] = True
     hello["mac"] = wire.hello_mac(secret, transcript, hello)
@@ -622,7 +844,7 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
                 os._exit(0)
     chan = ExecutorChannel(sock, rank, hb_interval, data_plane=data_plane,
                            data_server=data_server, host=data_host,
-                           secret=secret)
+                           secret=secret, shm_rings=shm_rings)
     if data_plane == "direct" and not chan.peers_ready.wait(timeout):
         os._exit(1)
 
@@ -642,11 +864,26 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
         chan.purge_mailboxes_before(job_id)
         tracer = Tracer(wrank, wsize, job=job_id) if job_traced else None
         chan.set_tracer(job_id, tracer)
+        flush_stop = threading.Event()
+        if tracer is not None:
+            # mid-job streaming flush: ship cumulative snapshots on an
+            # interval so the driver holds partial spans even when this
+            # job hangs, is SIGSTOPped, or never finishes. Each frame
+            # *replaces* the previous snapshot driver-side, so the final
+            # end-of-job flush stays authoritative.
+            interval = trace_flush_interval()
+            if interval > 0:
+                def _stream_trace(job_id=job_id, tracer=tracer):
+                    while not flush_stop.wait(interval):
+                        chan.send_trace(job_id, tracer)
+                threading.Thread(target=_stream_trace,
+                                 daemon=True).start()
 
         def flush_trace():
             # merge the always-on runtime gauges into the trace, then
             # ship it -- BEFORE the result frame, so the ordered control
             # socket guarantees the driver stored it when run() returns
+            flush_stop.set()
             if tracer is None:
                 return
             mb = chan.mailbox_for(job_id)
@@ -713,6 +950,7 @@ def executor_main(rank: int, size: int, driver: tuple[str, int],
             except (ConnectionError, OSError):
                 break
     chan.close_peers()
+    chan.close_shm()
     os._exit(0)
 
 

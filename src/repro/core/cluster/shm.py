@@ -1,0 +1,315 @@
+"""Shared-memory data-plane transport: per-rank inbound ring buffers.
+
+This is the transport tier *below* the wire codec. Each executor that
+enables it creates one ``multiprocessing.shared_memory`` segment before
+saying hello and advertises the segment name (plus a host-identity
+token) in the MAC-bound hello frame; the driver's peer broker
+re-publishes ``(host, segment, slot)`` per world rank, and a sender
+whose host token matches a receiver's attaches the receiver's segment
+and writes into the ring indexed by its own *stable slot* -- giving one
+single-producer / single-consumer ring per directed executor pair, no
+locks, no syscalls on the hot path.
+
+Ring layout (all cursors are monotonic uint64s, reduced mod capacity):
+
+- a 64-byte segment header: ``MAGIC``, ring count, ring capacity;
+- per ring, a 128-byte header block -- producer ``head`` at offset 0,
+  consumer ``tail`` at offset 64 (separate cache lines, so the two
+  sides never false-share);
+- per ring, a ``ring_bytes`` data region of framed records
+  ``[4B len][4B crc32][record bytes]``. A record's *bytes* may wrap
+  around the region end (two slice copies); only the 8-byte header must
+  be contiguous, so when fewer than 8 bytes remain before the end both
+  sides deterministically skip them.
+
+Records are whole wire frames (``wire.pack_frame`` blobs), so the codec
+and the mailbox-matching header fields are byte-identical to the TCP
+path. Writers commit by bumping ``head`` *after* the record bytes are
+in place; readers bump ``tail`` after copying a record out.
+
+The crc is not paranoia -- it is the correctness mechanism. On several
+deployment targets (microVM kernels, snapshot/restore hypervisors) a
+cross-process shared mapping is only *eventually* coherent at page
+granularity: a reader can observe the freshly stored ``head`` while
+some payload pages still show the previous lap's bytes. A lock-free
+ring that trusts "cursor visible => payload visible" silently hands
+stale bytes to the codec. So the consumer treats every inconsistency
+-- implausible length, record larger than the published ``head-tail``
+span, crc mismatch -- as *not yet visible* and simply retries on the
+next poll without advancing ``tail``; transient staleness heals, and
+nothing is ever surfaced to the mailbox until the checksum proves the
+copy complete. Symmetrically the producer keeps a private monotonic
+floor under its reads of ``tail`` (a torn read can never fabricate
+free space and overwrite unread records).
+
+Lifecycle: *nobody* who maps a segment unlinks it implicitly -- both
+create and attach detach from the stdlib resource tracker -- because
+the **driver** owns unlinking (on rank death, shrink, and shutdown).
+That is what keeps ``/dev/shm`` clean when a rank is SIGKILL'd
+mid-transfer: the mapping dies with the process, and the name is
+reaped by the driver that brokered it.
+
+Trust model: segment names are 128-bit random tokens brokered over the
+authenticated control plane, and POSIX shared memory is same-UID
+access like any local IPC -- the shm tier neither weakens nor replaces
+the wire HMAC story, it just never crosses a machine boundary.
+"""
+from __future__ import annotations
+
+import os
+import secrets as _secrets
+import socket as _socket
+import struct
+import time
+import zlib
+from multiprocessing import shared_memory
+
+MAGIC = 0x4D50_4947          # "MPIG"
+SEG_PREFIX = "mpig-"         # every segment name; chaos tests scan for it
+_SEG_HDR = struct.Struct("<QQQ")     # (magic, nrings, ring_bytes)
+_SEG_HDR_SIZE = 64
+_RING_HDR_SIZE = 128         # head @ +0, tail @ +64 (distinct cache lines)
+_U64 = struct.Struct("<Q")
+_REC = struct.Struct("<II")  # record header: (length, crc32 of the bytes)
+
+ENABLE_ENV = "MPIGNITE_SHM"
+RING_BYTES_ENV = "MPIGNITE_SHM_RING_BYTES"
+DEFAULT_RING_BYTES = 1 << 22         # 4 MiB per directed pair
+
+_OFF = ("", "0", "false", "off", "no")
+
+
+def enabled(default: bool = True) -> bool:
+    """The ``MPIGNITE_SHM`` kill switch (default on). Read in the
+    executor at segment creation and in the driver at pool construction
+    (an explicit ``shm=`` argument to the pool wins)."""
+    raw = os.environ.get(ENABLE_ENV)
+    if raw is None:
+        return default
+    return raw.strip().lower() not in _OFF
+
+
+def ring_bytes() -> int:
+    """Per-ring capacity. tmpfs pages are allocated on first touch, so
+    over-provisioning ring count is cheap; capacity bounds the largest
+    single *record* -- frames bigger than that are fragmented across
+    records by the sending channel and reassembled by the receiver."""
+    raw = os.environ.get(RING_BYTES_ENV)
+    if not raw:
+        return DEFAULT_RING_BYTES
+    try:
+        n = int(raw)
+    except ValueError:
+        return DEFAULT_RING_BYTES
+    return n if n >= (1 << 12) else DEFAULT_RING_BYTES
+
+
+def host_token() -> str:
+    """An identity two processes share iff they can plausibly share
+    ``/dev/shm``. The boot id distinguishes hosts that happen to share
+    a hostname; a false positive (containers sharing a kernel but not
+    an ipc namespace) is caught by the attach-failure TCP fallback."""
+    try:
+        with open("/proc/sys/kernel/random/boot_id") as f:
+            boot = f.read().strip()
+    except OSError:
+        boot = ""
+    return f"{_socket.gethostname()}|{boot}"
+
+
+def _untrack(seg: shared_memory.SharedMemory) -> None:
+    """Detach a mapping from the stdlib resource tracker so that *this*
+    process exiting never unlinks the name -- the driver owns that."""
+    try:  # py >= 3.13 grew track=False; older versions need surgery
+        from multiprocessing import resource_tracker
+        resource_tracker.unregister(seg._name, "shared_memory")
+    except Exception:  # noqa: BLE001 -- tracker internals are version-
+        pass           # dependent; worst case is an early unlink at exit
+
+
+class ShmRings:
+    """One segment holding ``nrings`` SPSC rings. The owning rank reads
+    every ring; each remote sender writes exactly one (its slot)."""
+
+    def __init__(self, seg: shared_memory.SharedMemory, owned: bool):
+        self._seg = seg
+        self.owned = owned
+        self.name = seg.name
+        buf = seg.buf
+        magic, nrings, cap = _SEG_HDR.unpack_from(buf, 0)
+        if magic != MAGIC:
+            raise ValueError(f"segment {seg.name!r} is not an MPIgnite "
+                             f"ring segment")
+        self.nrings = int(nrings)
+        self.cap = int(cap)
+        self._data0 = _SEG_HDR_SIZE + self.nrings * _RING_HDR_SIZE
+        # producer-side monotonic floor under observed tails (see below)
+        self._tail_floor: dict[int, int] = {}
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def create(cls, nrings: int, cap: int | None = None) -> "ShmRings":
+        cap = ring_bytes() if cap is None else int(cap)
+        size = _SEG_HDR_SIZE + nrings * _RING_HDR_SIZE + nrings * cap
+        name = SEG_PREFIX + _secrets.token_hex(16)
+        seg = shared_memory.SharedMemory(name=name, create=True, size=size)
+        _untrack(seg)
+        _SEG_HDR.pack_into(seg.buf, 0, MAGIC, nrings, cap)
+        return cls(seg, owned=True)
+
+    @classmethod
+    def attach(cls, name: str) -> "ShmRings":
+        seg = shared_memory.SharedMemory(name=name, create=False)
+        _untrack(seg)
+        return cls(seg, owned=False)
+
+    # -- cursors ------------------------------------------------------------
+    def _hdr(self, ring: int) -> int:
+        return _SEG_HDR_SIZE + ring * _RING_HDR_SIZE
+
+    def _head(self, ring: int) -> int:
+        return _U64.unpack_from(self._seg.buf, self._hdr(ring))[0]
+
+    def _tail(self, ring: int) -> int:
+        return _U64.unpack_from(self._seg.buf, self._hdr(ring) + 64)[0]
+
+    def _set_head(self, ring: int, v: int) -> None:
+        _U64.pack_into(self._seg.buf, self._hdr(ring), v)
+
+    def _set_tail(self, ring: int, v: int) -> None:
+        _U64.pack_into(self._seg.buf, self._hdr(ring) + 64, v)
+
+    def _data(self, ring: int) -> int:
+        return self._data0 + ring * self.cap
+
+    # -- producer -----------------------------------------------------------
+    def max_record(self) -> int:
+        """Largest record a ring can ever hold (one skip pad + header)."""
+        return self.cap - 2 * _REC.size
+
+    def _safe_tail(self, ring: int, head: int) -> int:
+        """The consumer's tail as this producer may trust it. A stale
+        read only ever *under*-reports freed space (tail is monotonic),
+        which is merely conservative -- but a torn read could fabricate
+        a larger tail and let us overwrite unread records. So clamp:
+        accept an observed tail only if it is within [floor, head]."""
+        t = self._tail(ring)
+        floor = self._tail_floor.get(ring, 0)
+        if t < floor or t > head:
+            return floor
+        self._tail_floor[ring] = t
+        return t
+
+    def write(self, ring: int, record: bytes,
+              deadline: float = 30.0) -> bool:
+        """Append one record to ``ring``. Returns False when the record
+        can never fit (caller sends via TCP instead); raises
+        ``ConnectionError`` when the ring stays full past ``deadline``
+        seconds (the consumer is wedged or dead -- backpressure here is
+        the moral equivalent of a TCP send blocking forever)."""
+        if ring < 0 or ring >= self.nrings:
+            return False
+        n = len(record)
+        if n > self.max_record():
+            return False
+        buf = self._seg.buf
+        cap = self.cap
+        head = self._head(ring)
+        pos = head % cap
+        pad = (cap - pos) if (cap - pos) < _REC.size else 0
+        need = pad + _REC.size + n
+        t_end = time.monotonic() + deadline
+        delay = 0.0
+        while cap - (head - self._safe_tail(ring, head)) < need:
+            if time.monotonic() >= t_end:
+                raise ConnectionError(
+                    f"shm ring {ring} of {self.name} full for "
+                    f"{deadline:.0f}s (record {n} bytes)")
+            time.sleep(delay)
+            delay = min(0.001, delay + 0.00005)
+        if pad:
+            head += pad
+            pos = 0
+        base = self._data(ring)
+        _REC.pack_into(buf, base + pos, n, zlib.crc32(record))
+        pos = (pos + _REC.size) % cap
+        first = min(n, cap - pos)
+        buf[base + pos:base + pos + first] = record[:first]
+        if first < n:
+            buf[base:base + (n - first)] = record[first:]
+        # commit: the cursor store is what publishes the record
+        self._set_head(ring, head + _REC.size + n)
+        return True
+
+    # -- consumer -----------------------------------------------------------
+    def try_read(self, ring: int) -> bytes | None:
+        """Pop one record (a copy), or None when the ring is empty *or*
+        the next record is not yet fully visible from this process.
+
+        Never raises and never advances ``tail`` speculatively: a
+        garbled length, a record overrunning the published span, or a
+        crc mismatch all mean some page of the producer's write has not
+        reached us yet (see the module docstring), so the caller simply
+        polls again. Validation, not ordering, is what makes the ring
+        correct here."""
+        buf = self._seg.buf
+        cap = self.cap
+        tail = self._tail(ring)
+        head = self._head(ring)
+        avail = head - tail
+        if avail <= 0:                  # empty (or a stale head view)
+            return None
+        pos = tail % cap
+        if (cap - pos) < _REC.size:     # producer skipped the end stub
+            skip = cap - pos            # (a commit always covers its pad)
+            if avail < skip + _REC.size:
+                return None             # pad committed but not visible yet
+            tail += skip
+            avail -= skip
+            pos = 0
+        base = self._data(ring)
+        n, crc = _REC.unpack_from(buf, base + pos)
+        if n > self.max_record() or _REC.size + n > avail:
+            return None                 # header bytes still stale
+        pos = (pos + _REC.size) % cap
+        first = min(n, cap - pos)
+        out = bytes(buf[base + pos:base + pos + first])
+        if first < n:
+            out += bytes(buf[base:base + (n - first)])
+        if zlib.crc32(out) != crc:
+            return None                 # payload pages still stale
+        self._set_tail(ring, tail + _REC.size + n)
+        return out
+
+    def pending(self, ring: int) -> int:
+        """Unread bytes in a ring (diagnostics / adaptive-poll hints)."""
+        return self._head(ring) - self._tail(ring)
+
+    def close(self) -> None:
+        try:
+            self._seg.close()
+        except (OSError, BufferError):
+            pass
+
+
+def unlink(name: str) -> bool:
+    """Remove a segment name; True if it existed. Driver-only: called
+    for a rank's advertised segment when that rank dies, shrinks away,
+    or the pool shuts down. Attached survivors keep their mappings (a
+    POSIX unlink removes the name, not live maps)."""
+    try:
+        seg = shared_memory.SharedMemory(name=name, create=False)
+    except (FileNotFoundError, OSError):
+        return False
+    # no _untrack here: SharedMemory.unlink() unregisters the name
+    # itself, pairing with the register this attach just performed
+    try:
+        seg.unlink()
+    except (FileNotFoundError, OSError):
+        pass
+    finally:
+        try:
+            seg.close()
+        except (OSError, BufferError):
+            pass
+    return True

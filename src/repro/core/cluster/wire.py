@@ -298,6 +298,37 @@ def _decode_strict(data: bytes | bytearray | memoryview) -> Any:
 # Framing
 # ---------------------------------------------------------------------------
 
+def pack_frame(header: dict, payload: bytes | list[bytes] = b"") -> bytes:
+    """One frame as a single contiguous blob -- byte-identical to what
+    ``send_frame`` puts on a socket. Record-oriented transports (the shm
+    rings) carry these blobs whole, so the codec and every frame header
+    field stay transport-agnostic."""
+    parts = [payload] if isinstance(payload, (bytes, bytearray)) else payload
+    h = json.dumps(header).encode()
+    return b"".join([_HDR.pack(len(h), sum(len(p) for p in parts)), h,
+                     *parts])
+
+
+def unpack_frame(buf: bytes | bytearray | memoryview
+                 ) -> tuple[dict, memoryview]:
+    """Inverse of ``pack_frame``. The payload comes back as a zero-copy
+    memoryview into ``buf``; malformed records raise ``ValueError`` (shm
+    ring corruption must be a clean error, like a bad socket frame)."""
+    mv = memoryview(buf)
+    try:
+        hlen, plen = _HDR.unpack_from(mv, 0)
+        if _HDR.size + hlen + plen != len(mv):
+            raise ValueError(
+                f"frame lengths (header={hlen}, payload={plen}) do not "
+                f"match record size {len(mv)}")
+        header = json.loads(bytes(mv[_HDR.size:_HDR.size + hlen]))
+    except (struct.error, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ValueError(f"malformed frame record: {e}") from e
+    if not isinstance(header, dict):
+        raise ValueError("frame header is not a JSON object")
+    return header, mv[_HDR.size + hlen:]
+
+
 def send_frame(sock: socket.socket, header: dict,
                payload: bytes | list[bytes] = b"", lock=None,
                on_tx=None) -> None:

@@ -203,6 +203,28 @@ def collective_cost(op: str, backend: str, nbytes: int, p: int) -> CollectiveCos
     return CollectiveCost(op, backend, int(b), steps)
 
 
+#: Transport-tier rows for the analytic time estimate: nominal per-hop
+#: latency and bandwidth for each data-plane channel the cluster runtime
+#: can pick. These are planning figures (same spirit as the byte model
+#: above), not measurements -- the shm benchmark gate compares *measured*
+#: ratios and only uses these to annotate the expected direction.
+#: ``relay`` is the driver-bounce fallback: two TCP hops per message.
+TRANSPORT_COST = {
+    "tcp": {"latency_us": 50.0, "gib_s": 3.0},
+    "shm": {"latency_us": 5.0, "gib_s": 12.0},
+    "relay": {"latency_us": 100.0, "gib_s": 1.5},
+}
+
+
+def transport_time_us(transport: str, nbytes: int, steps: int = 1) -> float:
+    """Analytic wall-time estimate for moving ``nbytes`` over ``steps``
+    serial hops of one transport tier (alpha-beta model over the
+    ``TRANSPORT_COST`` rows)."""
+    row = TRANSPORT_COST[transport]
+    return steps * row["latency_us"] + \
+        (nbytes / (row["gib_s"] * 2 ** 30)) * 1e6
+
+
 def pad_to_multiple(n: int, p: int) -> int:
     return (n + p - 1) // p * p
 

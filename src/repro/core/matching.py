@@ -982,6 +982,67 @@ class MessageComm:
         self._seg_span("seg.recv", t0, {"phase": str(phase), "nseg": nseg})
         return parts
 
+    def _fold_segments(self, src: int, tag: int, key: tuple, phase: Any,
+                       cur: np.ndarray, spans: list, f: Callable,
+                       step: int):
+        """Receive one reduce-scatter hop's segments and fold them into
+        ``cur``, double-buffered: the receive for segment s+1 is posted
+        (yielded) *before* segment s is folded, so on the progress
+        engine the fold of s overlaps the transfer of s+1 (and on the
+        blocking driver s+1 is already draining into the mailbox while
+        s folds). The per-segment arithmetic ``f(cur[a:b], piece)`` and
+        the concatenation order are identical to the receive-all-then-
+        fold-all form, so results stay bit-exact."""
+        t0 = time.perf_counter_ns() if self._obs is not None else 0
+        folded = []
+        prev = yield self._recv_op(src, tag, (*key, phase, 0))
+        for s in range(1, len(spans)):
+            nxt = yield self._recv_op(src, tag, (*key, phase, s))
+            a, b = spans[s - 1]
+            folded.append(f(cur[a:b], prev))
+            prev = nxt
+        a, b = spans[-1]
+        folded.append(f(cur[a:b], prev))
+        if t0:
+            self._seg_span("seg.fold", t0,
+                           {"step": step, "nseg": len(spans)})
+        return _cat(folded)
+
+    def _send_meta_payload(self, dst: int, tag: int, key: tuple,
+                           phase: Any, data: Any) -> None:
+        """Send one directed payload under the broadcast-style meta
+        protocol: a meta message announces whether the payload streams
+        as segments (and in how many) or rides whole inside the meta --
+        so the receiver, who cannot evaluate the sender's segmentation
+        eligibility, needs no cross-rank contract. Segmentation here is
+        pure transport: the receiver reassembles the full array before
+        any fold touches it, so arbitrary (non-elementwise) folds stay
+        legal."""
+        if self._use_segments(data):
+            flat = data.reshape(-1)
+            spans = G.segment_spans(flat.size,
+                                    self._segment_elems(data.dtype))
+            self._send_coll(dst, tag, (*key, phase, "m"),
+                            ("seg", len(spans), data.shape,
+                             data.dtype.str))
+            self._send_segments(dst, tag, key, (phase, "d"), flat, spans)
+        else:
+            self._send_coll(dst, tag, (*key, phase, "m"), ("whole", data))
+
+    def _recv_meta_payload(self, src: int, tag: int, key: tuple,
+                           phase: Any):
+        """Receive one ``_send_meta_payload`` transfer (drive with
+        ``yield from``); returns the reassembled payload."""
+        meta = yield self._recv_op(src, tag, (*key, phase, "m"))
+        if meta[0] != "seg":
+            return meta[1]
+        _, nseg, shape, dtype_str = meta
+        parts = yield from self._recv_segments(src, tag, key,
+                                               (phase, "d"), nseg)
+        flat = (_cat(parts) if parts
+                else np.empty(0, dtype=np.dtype(dtype_str)))
+        return flat.reshape(shape)
+
     def _seg_span(self, name: str, t0: int, args: dict) -> None:
         """Record a segment-phase span on the owning collective's track
         (so Perfetto nests it under the collective). Caller has already
@@ -1145,7 +1206,9 @@ class MessageComm:
         # reduce-scatter: after step s, the fold of chunk c has advanced
         # one hop; after p-1 steps rank r owns the full fold of chunk
         # (r+1) % p. Sends complete inline (always-nonblocking), so each
-        # step's segments pipeline through the ring.
+        # step's segments pipeline through the ring; the fold is
+        # double-buffered (_fold_segments), so folding segment s
+        # overlaps the transfer of segment s+1.
         for step in range(p - 1):
             send_idx = (self._rank - step) % p
             recv_idx = (self._rank - step - 1) % p
@@ -1153,16 +1216,9 @@ class MessageComm:
                                 chunks[send_idx], spans_of(send_idx))
             spans = spans_of(recv_idx)
             if spans:
-                cur = chunks[recv_idx]
-                pieces = yield from self._recv_segments(
-                    left, tag, key, ("rs", step), len(spans))
-                tf = time.perf_counter_ns() if self._obs is not None else 0
-                chunks[recv_idx] = _cat(
-                    [f(cur[a:b], piece)
-                     for (a, b), piece in zip(spans, pieces)])
-                if tf:
-                    self._seg_span("seg.fold", tf,
-                                   {"step": step, "nseg": len(spans)})
+                chunks[recv_idx] = yield from self._fold_segments(
+                    left, tag, key, ("rs", step), chunks[recv_idx],
+                    spans, f, step)
         # all-gather: circulate the reduced chunks; receive chunk c this
         # step, forward it the next.
         for step in range(p - 1):
@@ -1266,11 +1322,28 @@ class MessageComm:
 
     def _alltoall_sched(self, chunks: Sequence[Any], tag: int, key: tuple):
         p = len(self._group)
+        out = [None] * p
+        out[self._rank] = chunks[self._rank]
+        if p == 1:
+            return out
+        if self._backend in ("ring", "segmented"):
+            # pairwise exchange: at offset k, send to (r+k) and receive
+            # from (r-k) -- every directed pair exchanges exactly once,
+            # staggered so no receiver sees p-1 simultaneous bursts.
+            # Each directed chunk travels under the meta protocol, so
+            # eligible arrays stream as bounded segments instead of one
+            # whole-buffer message per destination.
+            for k in range(1, p):
+                dst = (self._rank + k) % p
+                src = (self._rank - k) % p
+                self._send_meta_payload(dst, tag, key, ("a2a", k),
+                                        chunks[dst])
+                out[src] = yield from self._recv_meta_payload(
+                    src, tag, key, ("a2a", k))
+            return out
         for r in range(p):
             if r != self._rank:
                 self._send_coll(r, tag, key, chunks[r])
-        out = [None] * p
-        out[self._rank] = chunks[self._rank]
         for r in range(p):
             if r != self._rank:
                 out[r] = yield self._recv_op(r, tag, key)
@@ -1290,6 +1363,37 @@ class MessageComm:
 
     def _reducescatter_sched(self, chunks: Sequence[Any], f: Callable,
                              tag: int, key: tuple):
+        """Each rank contributes P chunks; rank i ends with the f-fold
+        of everyone's chunk i.
+
+        linear: allgather then fold locally, rank-ordered --
+        deterministic for non-commutative ``f`` but moves (p-1)S per
+        rank. ring/segmented: a true ring reduce-scatter -- p-1 hops,
+        each forwarding a partial fold one hop closer to its owner, so
+        every rank moves ~S(p-1)/p bytes (the bandwidth-optimal half of
+        the segmented allreduce). Each hop's partial travels under the
+        meta protocol, so eligible arrays stream as segments; the fold
+        is applied to the reassembled chunk, so ``f`` only needs the
+        ring contract (associative + commutative), not elementwise-ness.
+        """
+        p = len(self._group)
+        if p == 1:
+            return chunks[0]
+        if self._backend in ("ring", "segmented"):
+            right, left = (self._rank + 1) % p, (self._rank - 1) % p
+            acc = list(chunks)
+            # at step s: forward the partial of chunk (r-s-1) to the
+            # right, fold the incoming partial of chunk (r-s-2); after
+            # p-1 steps rank r holds the full fold of chunk r.
+            for step in range(p - 1):
+                send_idx = (self._rank - step - 1) % p
+                recv_idx = (self._rank - step - 2) % p
+                self._send_meta_payload(right, tag, key, ("rs", step),
+                                        acc[send_idx])
+                piece = yield from self._recv_meta_payload(
+                    left, tag, key, ("rs", step))
+                acc[recv_idx] = f(acc[recv_idx], piece)
+            return acc[self._rank]
         gathered = yield from self._allgather_sched(list(chunks), tag, key)
         mine = gathered[0][self._rank]
         for contrib in gathered[1:]:

@@ -73,6 +73,15 @@ class ChannelStats:
     tx_bytes: int = 0
     rx_frames: int = 0
     rx_bytes: int = 0
+    #: frames/bytes that traveled the shared-memory rings instead of a
+    #: socket. These are *subsets* of the totals above (an shm frame is
+    #: byte-identical to its TCP form and counts in both), so the
+    #: measured-vs-analytic byte cross-check holds regardless of which
+    #: transport the broker picked.
+    shm_tx_frames: int = 0
+    shm_tx_bytes: int = 0
+    shm_rx_frames: int = 0
+    shm_rx_bytes: int = 0
     #: per-peer-rank breakdown; the driver appears as rank -1.
     per_peer: dict = field(default_factory=dict)
     _lock: threading.Lock = field(default_factory=threading.Lock,
@@ -82,29 +91,43 @@ class ChannelStats:
         p = self.per_peer.get(peer)
         if p is None:
             p = self.per_peer[peer] = {"tx_frames": 0, "tx_bytes": 0,
-                                       "rx_frames": 0, "rx_bytes": 0}
+                                       "rx_frames": 0, "rx_bytes": 0,
+                                       "shm_tx_bytes": 0,
+                                       "shm_rx_bytes": 0}
         return p
 
-    def on_tx(self, peer: int, nbytes: int) -> None:
+    def on_tx(self, peer: int, nbytes: int, shm: bool = False) -> None:
         with self._lock:
             self.tx_frames += 1
             self.tx_bytes += nbytes
             p = self._peer(peer)
             p["tx_frames"] += 1
             p["tx_bytes"] += nbytes
+            if shm:
+                self.shm_tx_frames += 1
+                self.shm_tx_bytes += nbytes
+                p["shm_tx_bytes"] += nbytes
 
-    def on_rx(self, peer: int, nbytes: int) -> None:
+    def on_rx(self, peer: int, nbytes: int, shm: bool = False) -> None:
         with self._lock:
             self.rx_frames += 1
             self.rx_bytes += nbytes
             p = self._peer(peer)
             p["rx_frames"] += 1
             p["rx_bytes"] += nbytes
+            if shm:
+                self.shm_rx_frames += 1
+                self.shm_rx_bytes += nbytes
+                p["shm_rx_bytes"] += nbytes
 
     def summary(self) -> dict:
         with self._lock:
             return {"tx_frames": self.tx_frames, "tx_bytes": self.tx_bytes,
                     "rx_frames": self.rx_frames, "rx_bytes": self.rx_bytes,
+                    "shm_tx_frames": self.shm_tx_frames,
+                    "shm_tx_bytes": self.shm_tx_bytes,
+                    "shm_rx_frames": self.shm_rx_frames,
+                    "shm_rx_bytes": self.shm_rx_bytes,
                     "peers": {k: dict(v) for k, v in self.per_peer.items()}}
 
 

@@ -49,7 +49,9 @@ from typing import Any
 
 TRACE_ENV = "MPIGNITE_TRACE"
 TRACE_EVENTS_ENV = "MPIGNITE_TRACE_EVENTS"
+TRACE_FLUSH_ENV = "MPIGNITE_TRACE_FLUSH"
 DEFAULT_CAPACITY = 32768
+DEFAULT_FLUSH_INTERVAL = 1.0
 
 #: pid used for driver-side events in the merged export (ranks use their
 #: own number; the driver sits after them).
@@ -73,6 +75,22 @@ def env_capacity() -> int:
         return max(16, int(raw))
     except ValueError:
         return DEFAULT_CAPACITY
+
+
+def trace_flush_interval() -> float:
+    """Seconds between *mid-job* incremental trace flushes from traced
+    executors (``$MPIGNITE_TRACE_FLUSH``; values <= 0 disable streaming
+    -- the end-of-job flush always happens). Each incremental frame is
+    a cumulative snapshot that replaces the previous one driver-side,
+    which is what makes ``pool.last_trace`` recoverable while a job is
+    still running (or hung). Read in each traced executor at job start."""
+    raw = os.environ.get(TRACE_FLUSH_ENV)
+    if not raw:
+        return DEFAULT_FLUSH_INTERVAL
+    try:
+        return float(raw)
+    except ValueError:
+        return DEFAULT_FLUSH_INTERVAL
 
 
 # -- the active-collective span, per thread ---------------------------------

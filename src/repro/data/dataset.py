@@ -86,7 +86,9 @@ from ..core import groups as G
 
 __all__ = ["DataContext", "PartitionedDataset"]
 
-_SAMPLES_PER_PART = 32      # sortByKey splitter samples per map partition
+_SAMPLES_PER_PART = 32      # sortByKey splitter sample floor per partition
+_SAMPLE_EVERY = 64          # +1 sample per this many records above the floor
+_MAX_SAMPLES_PER_PART = 1024
 _CTX_SEQ = itertools.count()
 _UID_SEQ = itertools.count()
 
@@ -275,24 +277,76 @@ def _as_pairs(records: list, how: str) -> list[tuple]:
 
 def _partition_samples(pairs: list[tuple]) -> list:
     """Evenly spaced key samples from one map partition (sorted keys),
-    feeding the deterministic sortByKey splitters."""
+    feeding the deterministic sortByKey splitters. The sample count
+    scales with partition size (one per ``_SAMPLE_EVERY`` records above
+    the floor, capped): a fixed per-partition count would weight a
+    10x-bigger partition the same as a tiny one in the pooled
+    quantiles, which is exactly how skewed inputs used to produce
+    skewed output partitions."""
     ks = sorted(k for k, _ in pairs)
     if not ks:
         return []
-    step = max(1, len(ks) // _SAMPLES_PER_PART)
-    return ks[::step][:_SAMPLES_PER_PART]
+    want = max(_SAMPLES_PER_PART, len(ks) // _SAMPLE_EVERY)
+    want = min(want, len(ks), _MAX_SAMPLES_PER_PART)
+    return [ks[i * len(ks) // want] for i in range(want)]
 
 
 def _splitters_from_samples(samples: list[tuple[int, list]],
                             nparts: int) -> list:
     """Range-partition splitters from ``(map partition, samples)`` pairs.
     Pure function of the sample multiset, so every rank -- and every
-    execution mode -- derives the identical partitioning."""
+    execution mode -- derives the identical partitioning.
+
+    Two skew defenses on top of plain quantiles:
+
+    - cut positions snap to *run boundaries* (positions where the sorted
+      sample key changes). ``_bucket_of`` sends a key equal to a
+      splitter right, so a cut inside a run of equal keys is a no-op
+      that silently merges its bucket into the next -- snapping makes
+      every cut effective and walls hot keys off into their own bucket.
+    - buckets still holding more than 2x the mean sample mass are
+      rebalanced: the heaviest bucket is split at its interior run
+      boundary nearest its middle, and the lightest adjacent pair is
+      merged to keep the bucket count (bounded greedy walk; a bucket
+      that is one giant run cannot be split -- equal keys are
+      inseparable under range partitioning)."""
     keys = sorted(k for _, ks in samples for k in ks)
-    if not keys:
+    n = len(keys)
+    if not keys or nparts <= 1:
         return []
-    return [keys[(i + 1) * len(keys) // nparts]
-            for i in range(nparts - 1)]
+    change = [i for i in range(1, n) if keys[i] != keys[i - 1]]
+    if not change:
+        return []                   # one distinct key: one bucket
+    cuts: list[int] = []
+    for j in range(1, nparts):
+        ideal = j * n // nparts
+        pos = min(change, key=lambda c: (abs(c - ideal), c))
+        if not cuts or pos > cuts[-1]:
+            cuts.append(pos)
+
+    def _loads(cs: list[int]) -> list[int]:
+        edges = [0] + cs + [n]
+        return [edges[i + 1] - edges[i] for i in range(len(edges) - 1)]
+
+    mean = n / nparts
+    for _ in range(4 * nparts):
+        ld = _loads(cuts)
+        heavy = max(range(len(ld)), key=ld.__getitem__)
+        if ld[heavy] <= 2.0 * mean:
+            break
+        edges = [0] + cuts + [n]
+        lo, hi = edges[heavy], edges[heavy + 1]
+        mid = (lo + hi) // 2
+        inner = [c for c in change if lo < c < hi]
+        if not inner:
+            break                   # a single run: cannot split further
+        cuts = sorted(cuts + [min(inner, key=lambda c: (abs(c - mid), c))])
+        if len(cuts) > nparts - 1:
+            ld2 = _loads(cuts)
+            drop = min(range(len(cuts)),
+                       key=lambda i: (ld2[i] + ld2[i + 1], i))
+            del cuts[drop]
+    return [keys[c] for c in cuts]
 
 
 def _bucket_of(how: str, key: Any, nparts: int, splitters: list | None,
@@ -655,8 +709,36 @@ class PartitionedDataset:
         return len(self.collect())
 
     def take(self, n: int) -> list:
-        """First ``n`` records (evaluates the full plan; convenience)."""
+        """First ``n`` records. Narrow-only plans (no shuffle boundary)
+        evaluate partitions incrementally on the driver and stop as soon
+        as ``n`` records are ready -- partitions past the cutoff are
+        never computed. Plans with a wide boundary (whose first output
+        record depends on every input record anyway) fall back to the
+        full ``collect``."""
+        if n <= 0:
+            return []
+        self._ctx._check_open()
+        stages = _compile(self._node)
+        stage = stages[0]
+        if len(stages) == 1 and stage.root is not None:
+            out: list = []
+            for part in range(stage.in_nparts):
+                recs = _apply_ops(stage.ops,
+                                  _root_records(stage.root, part),
+                                  None, part)
+                out.extend(recs)
+                if len(out) >= n:
+                    break
+            return out[:n]
         return self.collect()[:n]
+
+    def first(self) -> Any:
+        """The first record (streaming, via :meth:`take`); raises
+        ``ValueError`` on an empty dataset."""
+        got = self.take(1)
+        if not got:
+            raise ValueError("first() on an empty dataset")
+        return got[0]
 
 
 class DataContext:

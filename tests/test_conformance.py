@@ -1,17 +1,19 @@
 """Cross-mode collective conformance matrix.
 
 Every collective -- blocking and nonblocking -- runs over mode {local
-threads, cluster-relay, cluster-direct} x backend {linear, ring,
-segmented(-ring)} and is compared bit-exact against a numpy oracle
-computed in the test process. Payloads are int64 so the fold order
+threads, cluster-relay, cluster-direct (TCP), cluster-shm
+(shared-memory rings)} x backend {linear, ring, segmented(-ring)} and
+is compared bit-exact against a numpy oracle computed in the test
+process. Payloads are int64 so the fold order
 (rank-ordered at the linear root, rotation-ordered around the ring,
 per-segment in the segmented schedules) cannot perturb the bits: any
 mismatch is a routing/matching bug, not a float artifact.
 
 This is the systematic replacement for the ad-hoc per-mode spot checks
 that previously lived scattered across test_cluster/test_cross_mode.
-Cluster legs dispatch into warm pools (one per data plane, cached by
-``get_pool``), so the whole matrix costs two bootstraps total.
+Cluster legs dispatch into warm pools (one per data-plane/transport
+combination, cached by ``get_pool``), so the whole matrix costs three
+bootstraps total.
 """
 import numpy as np
 import pytest
@@ -200,8 +202,15 @@ def _run(closure, mode: str, backend: str) -> list:
     if mode == "local":
         return parallelize_func(closure, backend=backend, timeout=60,
                                 segment_bytes=seg).execute(N)
-    plane = mode.split("-", 1)[1]
-    pool = get_pool(N, data_plane=plane)
+    if mode == "cluster-shm":
+        # direct plane with the shared-memory transport brokered on;
+        # cluster-direct pins shm *off* so the matrix covers the plain
+        # TCP direct path separately (get_pool caches them apart)
+        pool = get_pool(N, data_plane="direct", shm=True)
+    else:
+        plane = mode.split("-", 1)[1]
+        pool = get_pool(N, data_plane=plane,
+                        shm=False if plane == "direct" else None)
     return pool.run(closure, backend=backend, timeout=60,
                     segment_bytes=seg)
 
@@ -209,7 +218,7 @@ def _run(closure, mode: str, backend: str) -> list:
 @pytest.mark.timeout(180)
 @pytest.mark.parametrize("backend", ["linear", "ring", "segmented"])
 @pytest.mark.parametrize("mode", ["local", "cluster-relay",
-                                  "cluster-direct"])
+                                  "cluster-direct", "cluster-shm"])
 @pytest.mark.parametrize("op", sorted(CLOSURES))
 def test_collective_conformance(op, mode, backend):
     out = _run(CLOSURES[op], mode, backend)

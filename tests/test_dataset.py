@@ -293,3 +293,137 @@ def test_sigkill_mid_shuffle_recomputes_only_lost_partitions(tmp_path):
     # bit-exact: same plan on the oracle (the flag file is set, so the
     # kill closure is inert there)
     assert got == oracle(build)
+
+
+# ---------------------------------------------------------------------------
+# streaming take()/first(): untouched partitions never evaluate
+# ---------------------------------------------------------------------------
+
+def test_take_streams_narrow_plans_without_touching_later_partitions():
+    """A narrow-only plan evaluates partitions one at a time under
+    ``take(n)`` and stops once n records are ready: the counting map
+    proves partitions past the cutoff were never computed."""
+    seen: list[int] = []
+
+    def spy(i):
+        seen.append(i)
+        return i * 10
+
+    with DataContext(2, mode="single") as ctx:
+        ds = ctx.range(100, nparts=10).map(spy).filter(lambda v: v % 20 == 0)
+        got = ds.take(3)
+    assert got == [0, 20, 40]
+    # partitions hold 10 records each; 3 survivors of the filter live in
+    # partition 0, so exactly one partition may have evaluated
+    assert seen == list(range(10)), seen
+
+
+def test_take_partial_partition_and_overshoot():
+    seen = []
+
+    def spy(i):
+        seen.append(i)
+        return i
+
+    with DataContext(2, mode="local") as ctx:
+        ds = ctx.range(40, nparts=4).map(spy)
+        assert ds.take(15) == list(range(15))
+        # 15 records need partitions 0 (10 recs) and 1; 2-3 untouched
+        assert seen == list(range(20)), seen
+        assert ds.take(0) == []
+        assert ds.take(10 ** 6) == list(range(40))
+
+
+def test_take_falls_back_to_collect_across_shuffles():
+    with DataContext(3, mode="local") as ctx:
+        ds = (ctx.parallelize([(i % 5, i) for i in range(50)], 5)
+                 .sortByKey(nparts=3))
+        assert ds.take(4) == ds.collect()[:4]
+
+
+def test_first_streams_and_raises_on_empty():
+    seen = []
+
+    def spy(i):
+        seen.append(i)
+        return i
+
+    with DataContext(2, mode="single") as ctx:
+        assert ctx.range(1000, nparts=100).map(spy).first() == 0
+        assert seen == list(range(10)), seen       # one partition only
+        with pytest.raises(ValueError, match="empty"):
+            ctx.parallelize([], 2).first()
+
+
+# ---------------------------------------------------------------------------
+# skew-aware sortByKey splitters
+# ---------------------------------------------------------------------------
+
+def _zipf_pairs(n=20000, nkeys=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, nkeys + 1)
+    w /= w.sum()
+    return [(int(k), i) for i, k in
+            enumerate(rng.choice(np.arange(nkeys), size=n, p=w))]
+
+
+def test_sortbykey_splitters_bound_skew_on_zipfian_keys():
+    """Zipf(1)-distributed keys (top key ~13% of records) through the
+    sampled splitters: no output partition may exceed 2x the mean --
+    the rebalance bound -- even when the *input* partitions are
+    themselves skewed."""
+    from repro.data.dataset import (_bucket_of, _partition_samples,
+                                    _splitters_from_samples)
+    pairs = _zipf_pairs()
+    n, nparts = len(pairs), 8
+    # skewed map partitions too: partition 0 holds half the records
+    bounds = [0, n // 2, n // 2 + n // 6, n // 2 + n // 3, n]
+    samples = [(mp, _partition_samples(pairs[bounds[mp]:bounds[mp + 1]]))
+               for mp in range(4)]
+    splitters = _splitters_from_samples(samples, nparts)
+    counts = [0] * nparts
+    for k, _ in pairs:
+        counts[_bucket_of("sortByKey", k, nparts, splitters, True)] += 1
+    ratio = max(counts) / (n / nparts)
+    assert ratio <= 2.0, (counts, ratio)
+
+
+def test_sortbykey_hot_key_is_walled_off():
+    """A single key holding 40% of the records is inseparable (range
+    partitioning cannot split equal keys) but must not drag *other*
+    keys into its bucket: every other partition stays below the mean
+    of the remaining mass plus slack."""
+    from repro.data.dataset import (_bucket_of, _partition_samples,
+                                    _splitters_from_samples)
+    rng = np.random.default_rng(1)
+    hot = [(500, i) for i in range(8000)]
+    cold = [(int(k), i) for i, k in
+            enumerate(rng.integers(0, 1000, size=12000))]
+    pairs = hot + cold
+    nparts = 5
+    samples = [(mp, _partition_samples(pairs[mp::4])) for mp in range(4)]
+    splitters = _splitters_from_samples(samples, nparts)
+    counts = [0] * nparts
+    for k, _ in pairs:
+        counts[_bucket_of("sortByKey", k, nparts, splitters, True)] += 1
+    hot_bucket = _bucket_of("sortByKey", 500, nparts, splitters, True)
+    # the hot bucket carries the inseparable run plus its range slice;
+    # every other bucket shares the cold mass evenly-ish
+    others = [c for b, c in enumerate(counts) if b != hot_bucket]
+    assert counts[hot_bucket] >= 8000
+    assert max(others) <= 2.0 * (12000 / nparts), counts
+
+
+def test_sortbykey_zipf_end_to_end_sorted_and_conformant():
+    """The skewed plan still sorts globally and matches the oracle in
+    every mode (the splitter math is shared, so this pins purity)."""
+    pairs = _zipf_pairs(n=4000, nkeys=200, seed=2)
+
+    def build(ctx):
+        return ctx.parallelize(pairs, 6).sortByKey(nparts=4)
+
+    want = oracle(build)
+    assert [k for k, _ in want] == sorted(k for k, _ in pairs)
+    with DataContext(3, mode="local") as ctx:
+        assert build(ctx).collect() == want
+        assert build(ctx).collect(shuffle="gather") == want

@@ -7,6 +7,7 @@ import json
 import logging
 import os
 import signal
+import threading
 import time
 import tracemalloc
 
@@ -244,8 +245,28 @@ def test_channel_stats_totals_and_per_peer():
     assert s["tx_frames"] == 2 and s["tx_bytes"] == 150
     assert s["rx_frames"] == 1 and s["rx_bytes"] == 70
     assert s["peers"][-1] == {"tx_frames": 1, "tx_bytes": 100,
-                              "rx_frames": 0, "rx_bytes": 0}
+                              "rx_frames": 0, "rx_bytes": 0,
+                              "shm_tx_bytes": 0, "shm_rx_bytes": 0}
     assert s["peers"][2]["rx_bytes"] == 70
+
+
+def test_channel_stats_shm_counters_are_subsets_of_totals():
+    """An shm frame counts in *both* the shm counters and the totals
+    (the frame is byte-identical to its TCP form), so the byte
+    cross-check holds whatever transport the broker picked."""
+    st = ChannelStats()
+    st.on_tx(3, 100, shm=True)
+    st.on_tx(3, 40)
+    st.on_rx(3, 60, shm=True)
+    s = st.summary()
+    assert s["tx_frames"] == 2 and s["tx_bytes"] == 140
+    assert s["shm_tx_frames"] == 1 and s["shm_tx_bytes"] == 100
+    assert s["rx_frames"] == 1 and s["rx_bytes"] == 60
+    assert s["shm_rx_frames"] == 1 and s["shm_rx_bytes"] == 60
+    assert s["peers"][3]["shm_tx_bytes"] == 100
+    assert s["peers"][3]["shm_rx_bytes"] == 60
+    assert s["shm_tx_bytes"] <= s["tx_bytes"]
+    assert s["shm_rx_bytes"] <= s["rx_bytes"]
 
 
 # ---------------------------------------------------------------------------
@@ -426,3 +447,71 @@ def test_rank_health_rtt_and_sigstop():
             time.sleep(0.05)
         assert {h["rank"]: h for h in pool.rank_health()}[1][
             "last_seen_age"] < 0.3
+
+
+@pytest.mark.cluster
+@pytest.mark.timeout(120)
+def test_streaming_flush_surfaces_partial_trace_mid_job(
+        tmp_path, monkeypatch):
+    """Mid-job trace recovery: executors stream incremental trace
+    frames every ``MPIGNITE_TRACE_FLUSH`` seconds, so when one rank is
+    SIGSTOPped mid-job the driver's ``pool.last_trace`` already holds
+    the *other* ranks' spans while the job is still wedged -- the
+    post-mortem view a dead job used to take to the grave."""
+    from repro.core.cluster import ExecutorPool
+
+    monkeypatch.setenv("MPIGNITE_TRACE_FLUSH", "0.2")
+    stop_flag = str(tmp_path / "parked")
+    go_flag = str(tmp_path / "go")
+
+    def closure(comm):
+        r = comm.get_rank()
+        x = comm.allreduce(np.arange(64, dtype=np.int64), np.add)
+        if r == 1:
+            open(stop_flag, "w").close()
+            while not os.path.exists(go_flag):
+                time.sleep(0.02)
+        comm.barrier()
+        return int(x.sum())
+
+    with ExecutorPool(3, timeout=90.0, hb_interval=0.05,
+                      hb_timeout=60.0) as pool:
+        result: dict = {}
+
+        def run():
+            result["out"] = pool.run(closure, trace=True, timeout=90.0)
+
+        t = threading.Thread(target=run)
+        t.start()
+        deadline = time.time() + 30.0
+        while not os.path.exists(stop_flag) and time.time() < deadline:
+            time.sleep(0.02)
+        assert os.path.exists(stop_flag), "rank 1 never parked"
+        victim = pool.pids[1]
+        os.kill(victim, signal.SIGSTOP)
+        try:
+            # ranks 0 and 2 are parked in the barrier; their flush
+            # threads keep streaming. Poll until their allreduce spans
+            # surface on the driver while the job is still running.
+            got_ranks: set = set()
+            deadline = time.time() + 20.0
+            while time.time() < deadline:
+                jt = pool.last_trace
+                if jt is not None:
+                    got_ranks = {row["rank"] for row in jt.collectives()
+                                 if row["op"] == "allreduce"}
+                    if {0, 2} <= got_ranks:
+                        break
+                time.sleep(0.05)
+            assert t.is_alive(), "job finished before the partial check"
+            assert {0, 2} <= got_ranks, got_ranks
+        finally:
+            os.kill(victim, signal.SIGCONT)
+        open(go_flag, "w").close()
+        t.join(timeout=60.0)
+        assert not t.is_alive()
+        assert result["out"] == [int(np.arange(64).sum()) * 3] * 3
+        # the end-of-job flush completes the picture: all three ranks
+        rows = pool.last_trace.collectives()
+        assert {row["rank"] for row in rows
+                if row["op"] == "allreduce"} == {0, 1, 2}

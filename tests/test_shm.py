@@ -1,0 +1,344 @@
+"""The shared-memory transport tier (``core.cluster.shm``).
+
+Three layers:
+
+- pure unit tests of the SPSC ring segment: roundtrip, wrap-around,
+  the <8-byte end-of-region pad skip, backpressure (full-ring
+  ``ConnectionError``), never-fits records, the crc gate that holds
+  back stale/torn records until their bytes are really visible, and
+  the contiguous ``pack_frame``/``unpack_frame`` codec the rings
+  carry;
+- ``cluster`` integration: a direct-plane pool auto-selects shm between
+  same-host ranks (observed via the per-channel shm counters), an
+  ``shm=False`` pool stays pure TCP, and a clean shutdown unlinks every
+  brokered segment;
+- ``chaos``: SIGKILL a rank mid-shm transfer -- survivors' parked
+  receives fail with ``PeerDeadError`` (not a hang), the driver raises
+  ``ExecutorFailure``, and teardown leaves zero ``/dev/shm`` segments
+  behind even though the victim never got to clean up.
+"""
+import glob
+import os
+import signal
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import ExecutorPool, get_pool
+from repro.core.cluster import shm as shm_mod
+from repro.core.cluster import wire
+from repro.core.cluster.shm import ShmRings
+
+
+def _segments() -> set[str]:
+    return {os.path.basename(p)
+            for p in glob.glob(f"/dev/shm/{shm_mod.SEG_PREFIX}*")}
+
+
+@pytest.fixture
+def rings():
+    r = ShmRings.create(nrings=2, cap=4096)
+    yield r
+    r.close()
+    shm_mod.unlink(r.name)
+
+
+# ---------------------------------------------------------------------------
+# ring mechanics
+# ---------------------------------------------------------------------------
+
+def test_ring_roundtrip_many_records(rings):
+    att = ShmRings.attach(rings.name)
+    try:
+        msgs = [os.urandom(n) for n in (0, 1, 7, 100, 1000)]
+        for m in msgs:
+            assert att.write(0, m)
+        got = []
+        while (r := rings.try_read(0)) is not None:
+            got.append(r)
+        assert got == msgs
+        assert rings.try_read(0) is None
+        assert rings.pending(0) == 0
+    finally:
+        att.close()
+
+
+def test_ring_wraps_and_skips_short_end_stub(rings):
+    """Drive the cursors past the region end repeatedly, including the
+    case where fewer than 8 bytes remain before the end (the record
+    header must be contiguous, so both sides deterministically skip the
+    stub): 2000- then 2077-byte records park the cursors 3 bytes from
+    the region end, so the next write must pad."""
+    a, b = b"A" * 2000, b"B" * 2077
+    assert rings.write(0, a)
+    assert rings.try_read(0) == a
+    assert rings.write(0, b)
+    assert rings.try_read(0) == b                   # head=tail=4093
+    for i in range(50):                             # many wraps + pads
+        m = bytes([i % 256]) * (1000 + i * 7 % 97)
+        assert rings.write(0, m)
+        assert rings.try_read(0) == m
+    assert rings.pending(0) == 0
+
+
+def test_ring_interleaved_wrap_with_backlog(rings):
+    """Records queued two-deep across the wrap point survive intact."""
+    a, b = os.urandom(1800), os.urandom(1900)
+    for _ in range(20):
+        assert rings.write(1, a)
+        assert rings.write(1, b)
+        assert rings.try_read(1) == a
+        assert rings.try_read(1) == b
+
+
+def test_ring_backpressure_and_never_fits(rings):
+    big = b"z" * 2000
+    assert rings.write(0, big)
+    assert rings.write(0, big)                       # 4016 of 4096 used
+    with pytest.raises(ConnectionError, match="full"):
+        rings.write(0, big, deadline=0.05)           # consumer wedged
+    assert rings.try_read(0) == big                  # drain one...
+    assert rings.write(0, big, deadline=0.05)        # ...and it fits again
+    # a record larger than the ring can *ever* hold: False (use TCP),
+    # never an exception
+    assert rings.write(0, b"q" * 4096) is False
+    assert rings.write(0, b"q" * rings.max_record() + b"!") is False
+    # out-of-range ring index (a joiner beyond the provisioned slots)
+    assert rings.write(99, b"hi") is False
+    assert rings.write(-1, b"hi") is False
+
+
+def test_ring_withholds_stale_bytes_until_visible(rings):
+    """The consumer's visibility gate: on hosts where a shared mapping
+    is only eventually coherent, the reader can see ``head`` before the
+    record bytes. Simulate both stale-header and stale-payload views by
+    stomping the committed bytes -- ``try_read`` must return None (not
+    garbage, not an exception) and must not advance ``tail``, then heal
+    and deliver the record once the true bytes 'arrive' again."""
+    assert rings.write(0, b"ok")
+    base = rings._data(0)
+    # stale header: a length word from another lap looks like garbage
+    struct.pack_into("<I", rings._seg.buf, base, 1 << 30)
+    assert rings.try_read(0) is None
+    assert rings.pending(0) > 0                     # tail did not move
+    struct.pack_into("<I", rings._seg.buf, base, 2)
+    assert rings.try_read(0) == b"ok"               # healed
+    # stale payload: length+crc visible, one payload byte still old
+    # (cursors sit at 10 after the 2-byte record, so the new record's
+    # 8-byte header is at +10 and its payload starts at +18)
+    assert rings.write(0, b"payload!")
+    old = rings._seg.buf[base + 18]
+    rings._seg.buf[base + 18] = (old + 1) % 256
+    assert rings.try_read(0) is None                # crc gate holds it
+    assert rings.pending(0) > 0
+    rings._seg.buf[base + 18] = old
+    assert rings.try_read(0) == b"payload!"
+    assert rings.pending(0) == 0
+
+
+def test_attach_validates_magic():
+    from multiprocessing import shared_memory
+    seg = shared_memory.SharedMemory(name=f"{shm_mod.SEG_PREFIX}bogus-test",
+                                     create=True, size=4096)
+    try:
+        with pytest.raises(ValueError, match="not an MPIgnite"):
+            ShmRings.attach(seg.name)
+    finally:
+        seg.close()
+        seg.unlink()
+
+
+def test_unlink_reaps_name_once():
+    r = ShmRings.create(nrings=1, cap=4096)
+    name = r.name
+    r.close()
+    assert name in _segments()
+    assert shm_mod.unlink(name) is True
+    assert name not in _segments()
+    assert shm_mod.unlink(name) is False            # already gone
+    with pytest.raises(FileNotFoundError):
+        ShmRings.attach(name)
+
+
+def test_enable_and_ring_bytes_env(monkeypatch):
+    monkeypatch.delenv(shm_mod.ENABLE_ENV, raising=False)
+    assert shm_mod.enabled()
+    for off in ("0", "false", "OFF", "no", ""):
+        monkeypatch.setenv(shm_mod.ENABLE_ENV, off)
+        assert not shm_mod.enabled(), off
+    monkeypatch.setenv(shm_mod.ENABLE_ENV, "1")
+    assert shm_mod.enabled()
+    monkeypatch.delenv(shm_mod.RING_BYTES_ENV, raising=False)
+    assert shm_mod.ring_bytes() == shm_mod.DEFAULT_RING_BYTES
+    monkeypatch.setenv(shm_mod.RING_BYTES_ENV, str(1 << 16))
+    assert shm_mod.ring_bytes() == 1 << 16
+    for bad in ("12", "-5", "zap"):                 # too small / invalid
+        monkeypatch.setenv(shm_mod.RING_BYTES_ENV, bad)
+        assert shm_mod.ring_bytes() == shm_mod.DEFAULT_RING_BYTES
+
+
+def test_host_token_is_stable_and_host_shaped():
+    a, b = shm_mod.host_token(), shm_mod.host_token()
+    assert a == b and "|" in a
+
+
+# ---------------------------------------------------------------------------
+# the contiguous frame codec shm records ride
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_frame_roundtrip():
+    hdr = {"kind": "msg", "ctx": 7, "tag": -3, "src": 2, "job": 1}
+    for payload in (b"", b"x", os.urandom(4096)):
+        header, body = wire.unpack_frame(wire.pack_frame(hdr, payload))
+        assert header == hdr and bytes(body) == payload
+    # multi-part payloads concatenate exactly like the socket path
+    parts = [b"abc", b"", os.urandom(100)]
+    header, body = wire.unpack_frame(wire.pack_frame(hdr, parts))
+    assert bytes(body) == b"".join(parts)
+
+
+def test_unpack_frame_rejects_malformed():
+    good = wire.pack_frame({"a": 1}, b"xyz")
+    for bad in (b"", b"\x00" * 3, good[:-1], good + b"!",
+                b"\xff" * len(good)):
+        with pytest.raises(ValueError):
+            wire.unpack_frame(bad)
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: auto-selection, counters, clean teardown
+# ---------------------------------------------------------------------------
+
+def _collect_and_stats(comm):
+    out = comm.allreduce(np.arange(512, dtype=np.int64),
+                         lambda a, b: a + b)
+    comm.barrier()
+    s = comm._chan.stats.summary()
+    return (out.tolist(), s["shm_tx_frames"], s["shm_rx_frames"],
+            s["tx_frames"])
+
+
+@pytest.mark.cluster
+@pytest.mark.timeout(120)
+def test_pool_auto_selects_shm_and_unlinks_on_shutdown():
+    before = _segments()
+    with ExecutorPool(4, timeout=60.0, data_plane="direct",
+                      shm=True) as pool:
+        during = _segments() - before
+        assert len(during) >= 4                 # one segment per rank
+        out = pool.run(_collect_and_stats, backend="ring", timeout=60.0)
+        want = (np.arange(512, dtype=np.int64) * 4).tolist()
+        for rank, (got, shm_tx, shm_rx, tx) in enumerate(out):
+            assert got == want, rank
+            # the p=4 whole-buffer ring moves 3 data messages each way
+            # per rank, all eligible for shm (same host by definition)
+            assert shm_tx >= 3 and shm_rx >= 3, (rank, shm_tx, shm_rx)
+            assert shm_tx <= tx
+    after = _segments() - before
+    assert after == set(), f"leaked segments: {after}"
+
+
+@pytest.mark.cluster
+@pytest.mark.timeout(120)
+def test_shm_disabled_pool_stays_on_tcp():
+    with ExecutorPool(2, timeout=60.0, data_plane="direct",
+                      shm=False) as pool:
+        out = pool.run(_collect_and_stats, backend="ring", timeout=60.0)
+        want = (np.arange(512, dtype=np.int64) * 2).tolist()
+        for got, shm_tx, shm_rx, tx in out:
+            assert got == want
+            assert shm_tx == 0 and shm_rx == 0
+            assert tx > 0
+
+
+@pytest.mark.cluster
+@pytest.mark.timeout(120)
+def test_shm_fragments_oversized_frames():
+    """A frame bigger than one ring record (8 MiB payload vs the 4 MiB
+    default ring) is fragmented through the ring and reassembled, not
+    spilled to TCP -- frame size must never select the transport, or a
+    big send and a small same-tag successor could be reordered across
+    the two reader threads."""
+    def closure(comm):
+        x = np.arange(1 << 20, dtype=np.float64) * (comm.get_rank() + 1)
+        # segment_bytes=0 disables the segmented upgrade, forcing
+        # whole-buffer 8 MiB wire frames through the ring backend
+        out = comm.with_backend("ring").allreduce(x, lambda a, b: a + b)
+        comm.barrier()
+        s = comm._chan.stats.summary()
+        return (float(out[1]), s["shm_tx_frames"], s["shm_rx_frames"])
+
+    with ExecutorPool(2, timeout=60.0, data_plane="direct",
+                      shm=True) as pool:
+        out = pool.run(closure, timeout=60.0, segment_bytes=0)
+    for val, shm_tx, shm_rx in out:
+        assert val == 3.0                   # 1*(1) + 1*(2)
+        assert shm_tx >= 1 and shm_rx >= 1, (shm_tx, shm_rx)
+
+
+@pytest.mark.cluster
+@pytest.mark.timeout(120)
+def test_get_pool_caches_shm_and_tcp_pools_separately():
+    a = get_pool(2, data_plane="direct", shm=True)
+    b = get_pool(2, data_plane="direct", shm=False)
+    assert a is not b
+    assert a is get_pool(2, data_plane="direct", shm=True)
+
+
+# ---------------------------------------------------------------------------
+# chaos: SIGKILL mid-shm transfer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.cluster
+@pytest.mark.chaos
+@pytest.mark.timeout(180)
+def test_sigkill_mid_shm_transfer_fails_fast_and_leaks_nothing(tmp_path):
+    """Rank 1 SIGKILLs itself between shm ring rounds. Survivors parked
+    on receives from the victim must fail with ``PeerDeadError`` well
+    before the receive timeout, the driver must raise
+    ``ExecutorFailure``, and -- the lifecycle point of the tier --
+    every brokered segment (including the dead rank's, which its owner
+    can no longer clean up) is unlinked by the driver at teardown."""
+    from repro.core import ExecutorFailure, PeerDeadError
+
+    marker_dir = str(tmp_path / "markers")
+    os.makedirs(marker_dir)
+    before = _segments()
+
+    def closure(comm):
+        rank = comm.get_rank()
+        x = np.arange(1 << 15, dtype=np.int64)      # 256 KiB via shm
+        t0 = time.monotonic()
+        try:
+            for i in range(100):
+                x = comm.with_backend("ring").allreduce(
+                    x, lambda a, b: a + b)
+                if i == 2 and rank == 1:
+                    s = comm._chan.stats.summary()
+                    with open(os.path.join(marker_dir, "victim"),
+                              "w") as f:
+                        f.write(str(s["shm_tx_frames"]))
+                    os.kill(os.getpid(), signal.SIGKILL)
+        except PeerDeadError as e:
+            with open(os.path.join(marker_dir, f"rank{rank}"), "w") as f:
+                f.write(f"{time.monotonic() - t0:.3f}")
+            raise e
+        return "survived"
+
+    with pytest.raises(ExecutorFailure):
+        with ExecutorPool(3, timeout=30.0, data_plane="direct", shm=True,
+                          hb_interval=0.05, hb_timeout=0.8) as pool:
+            pool.run(closure, timeout=30.0)
+
+    victim = os.path.join(marker_dir, "victim")
+    assert os.path.exists(victim), "victim never reached the shm rounds"
+    assert int(open(victim).read()) > 0, "victim was not sending via shm"
+    survivors = sorted(n for n in os.listdir(marker_dir)
+                       if n.startswith("rank"))
+    assert survivors, "no survivor saw PeerDeadError"
+    for n in survivors:
+        assert float(open(os.path.join(marker_dir, n)).read()) < 25.0
+    after = _segments() - before
+    assert after == set(), f"leaked segments: {after}"
