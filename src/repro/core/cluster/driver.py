@@ -613,6 +613,15 @@ class ExecutorPool:
             self.membership_epoch += 1
             with self._lock:
                 self._wrank = {s: w for w, s in enumerate(survivors)}
+                # a dead rank can never deliver its result for the
+                # failed job -- mark its straggler slot done so the next
+                # dispatch's drain only waits on *live* stragglers
+                # instead of idling out the failed job's whole deadline
+                for r in info["dead_old_ranks"]:
+                    if r < len(self._done):
+                        self._done[r] = True
+                if self._done and all(self._done):
+                    self._done_event.set()
             now = time.time()
             for s in survivors:
                 self._last_seen[s] = now

@@ -131,6 +131,60 @@ class ChannelStats:
                     "peers": {k: dict(v) for k, v in self.per_peer.items()}}
 
 
+@dataclass
+class AcceptanceStats:
+    """Speculative-decoding acceptance accounting for one engine.
+
+    The draft model proposes ``gamma`` tokens per slot per spec round;
+    the target accepts a prefix. This tracks the aggregate ratio (the
+    number every capacity model of speculative decoding turns on) plus
+    a live per-request breakdown so a finished ``Generation`` can carry
+    its own acceptance ratio. Per-request entries are popped when the
+    request finishes, so memory stays bounded by in-flight requests,
+    not by requests served.
+    """
+    proposed: int = 0
+    accepted: int = 0
+    rounds: int = 0
+    #: uid -> [proposed, accepted] for requests still in flight
+    live: dict = field(default_factory=dict)
+
+    def record(self, uid: int, proposed: int, accepted: int) -> None:
+        self.proposed += proposed
+        self.accepted += accepted
+        self.rounds += 1
+        ent = self.live.setdefault(uid, [0, 0])
+        ent[0] += proposed
+        ent[1] += accepted
+
+    def pop_request(self, uid: int) -> float | None:
+        """Finish one request: drop its live entry, return its mean
+        acceptance ratio (None when it never ran a spec round)."""
+        ent = self.live.pop(uid, None)
+        if ent is None or ent[0] == 0:
+            return None
+        return ent[1] / ent[0]
+
+    @property
+    def ratio(self) -> float:
+        """Aggregate accepted/proposed over the engine's lifetime."""
+        return self.accepted / max(self.proposed, 1)
+
+    def summary(self) -> dict:
+        return {"proposed": self.proposed, "accepted": self.accepted,
+                "rounds": self.rounds, "ratio": self.ratio}
+
+    def publish(self, tracer, prefix: str = "serve.spec") -> None:
+        """Drop the aggregate into a Tracer's free-form counters so the
+        ratio lands in the job's traced snapshot (JobTrace.counters)."""
+        if tracer is None:
+            return
+        tracer.counters[f"{prefix}.proposed"] = self.proposed
+        tracer.counters[f"{prefix}.accepted"] = self.accepted
+        tracer.counters[f"{prefix}.rounds"] = self.rounds
+        tracer.counters[f"{prefix}.accept_ratio"] = round(self.ratio, 4)
+
+
 def base_op(op: str) -> str:
     """``iallreduce`` -> ``allreduce`` etc.; the byte model is identical,
     only the overlap flag differs."""

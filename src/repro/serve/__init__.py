@@ -1,3 +1,16 @@
-from .engine import Engine, Request
+from .engine import Engine, EngineStats, Generation, Request
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "EngineStats", "Generation", "Request",
+           "ClusterServer", "SpecDecoder"]
+
+
+def __getattr__(name):
+    # cluster/spec pull in the runtime and model stacks; keep plain
+    # `from repro.serve import Engine` light by deferring those imports
+    if name == "ClusterServer":
+        from .cluster import ClusterServer
+        return ClusterServer
+    if name == "SpecDecoder":
+        from .spec import SpecDecoder
+        return SpecDecoder
+    raise AttributeError(name)

@@ -1,0 +1,458 @@
+"""Multi-replica serving: Engine replicas sharded across a warm
+ExecutorPool.
+
+The single-process slot engine (serve/engine.py) tops out at one
+process's decode throughput. This front-end runs ONE continuous-batching
+engine per pool rank and keeps it alive in *executor process memory*
+across dispatched jobs (the same pattern as the dataset layer's
+partition store): the driver never holds model state, it only routes.
+
+Life of a request::
+
+    driver                                executors (one engine each)
+    ------                                ---------------------------
+    submit() -> pending queue
+    step_round():
+      least-loaded assignment      ---->  engine.submit() per replica
+      one pooled job (quantum N)   ---->  up to N engine steps
+      merge outboxes               <----  ALL unacked finished results
+      ack                          ---->  (next round) outbox pruning
+
+Three properties worth naming:
+
+- **Weights cross the driver zero times in steady state.** At warm-up,
+  rank 0 materializes the parameters and ``ibcast``\\ s them over the
+  executor data plane (direct TCP / shm rings); after that, rounds move
+  only token ids and stats. The driver stays a pure control plane.
+- **Delivery is idempotent.** Executors keep every finished result in a
+  per-replica outbox until the driver acknowledges it, and return the
+  whole outbox each round; the driver dedups by uid. A round lost to a
+  failure therefore never loses a finished generation that survived.
+- **Failure shrinks, it doesn't restart.** On ``ExecutorFailure`` the
+  driver calls ``pool.shrink_to_survivors()``: surviving replicas keep
+  their processes (and their warm engines -- slot identity is stable),
+  and requests owned by dead replicas are silently re-queued onto the
+  survivors. Greedy decoding is deterministic, so a re-run request
+  yields the identical generation.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+import uuid
+from collections import deque
+
+import numpy as np
+
+from ..core.cluster.driver import ExecutorFailure, ExecutorPool
+from ..core.cluster.launcher import CommandLauncher
+from .engine import Generation
+
+__all__ = ["ClusterServer", "serve_quantum", "smoke_engine_spec"]
+
+
+def serve_quantum() -> int:
+    """Decode steps each replica runs per dispatched round.
+    ``MPIGNITE_SERVE_QUANTUM`` overrides the default 8: higher amortizes
+    dispatch overhead better, lower tightens admission latency."""
+    try:
+        return max(1, int(os.environ.get("MPIGNITE_SERVE_QUANTUM", "8")))
+    except ValueError:
+        return 8
+
+
+# ---------------------------------------------------------------------------
+# Replica registry: engines living in *executor process memory*, surviving
+# across pooled jobs (same pattern as data/dataset.py's partition store).
+# Keyed by server namespace so concurrent servers on one pool never
+# collide. The outbox holds finished-but-unacknowledged results per
+# namespace -- the idempotent-delivery half of the protocol.
+# ---------------------------------------------------------------------------
+_REPLICAS: dict[str, object] = {}
+_OUTBOXES: dict[str, dict[int, dict]] = {}
+_REG_LOCK = threading.Lock()
+
+
+def _replica_put(ns: str, eng) -> None:
+    with _REG_LOCK:
+        _REPLICAS[ns] = eng
+        _OUTBOXES[ns] = {}
+
+
+def _replica_get(ns: str):
+    """(engine, outbox) for one namespace, or (None, None). A module
+    function (not a closure capture) so shipped closures reference it
+    by import -- the lock itself never rides the wire."""
+    with _REG_LOCK:
+        return _REPLICAS.get(ns), _OUTBOXES.get(ns)
+
+
+def _numpy_tree(tree):
+    import jax
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def _warmup_closure(ns: str, build_engine, load_params):
+    def run(comm):
+        params = None
+        if load_params is not None:
+            if comm.get_rank() == 0:
+                params = _numpy_tree(load_params())
+            if comm.get_size() > 1:
+                # weights ride the executor data plane (direct TCP/shm),
+                # not the driver control plane -- the one and only bulk
+                # transfer this server ever does
+                params = comm.ibcast(0, params).wait()
+        eng = build_engine(params, comm.get_rank())
+        _replica_put(ns, eng)
+        return {"rank": comm.get_rank(), "slots": eng.max_slots}
+    return run
+
+
+def _round_closure(ns: str, admits: dict, acks: list, quantum: int):
+    """One serving round on every replica: admit this round's
+    assignments (keyed by world rank), prune acknowledged results, run
+    up to ``quantum`` engine steps, and return the full outbox plus a
+    load figure for the driver's next routing decision."""
+    def run(comm):
+        eng, outbox = _replica_get(ns)
+        if eng is None:
+            raise RuntimeError(
+                f"serve replica {ns!r} missing on rank {comm.get_rank()} "
+                "(warm-up never ran here?)")
+        for uid in acks:
+            outbox.pop(uid, None)
+        for spec in admits.get(comm.get_rank(), ()):  # keys: world ranks
+            eng.submit(np.asarray(spec["prompt"], np.int32),
+                       spec["max_new_tokens"], spec["eos_id"],
+                       uid=spec["uid"])
+        steps = 0
+        while steps < quantum and eng.pending() > 0:
+            for req in eng.step():
+                gen = eng._generation(req)
+                outbox[gen.uid] = {"uid": gen.uid, "tokens": list(gen),
+                                   "truncated": gen.truncated,
+                                   "accept_ratio": gen.accept_ratio}
+            steps += 1
+        obs = getattr(comm, "_obs", None)
+        if obs is not None:
+            # acceptance + occupancy land in the job's traced snapshot
+            # (JobTrace.counters) alongside the runtime's own counters
+            eng.acceptance.publish(obs)
+            obs.counters["serve.tokens_out"] = eng.stats.tokens_out
+            obs.counters["serve.truncations"] = eng.stats.truncations
+            obs.counters["serve.mean_occupancy"] = round(
+                eng.stats.mean_occupancy, 3)
+        return {"finished": list(outbox.values()), "load": eng.pending(),
+                "stats": eng.stats.summary(),
+                "acceptance": eng.acceptance.summary()}
+    return run
+
+
+class ClusterServer:
+    """Driver-side front-end sharding requests over engine replicas.
+
+    ``build_engine(params, replica_id) -> Engine`` runs once per rank at
+    warm-up (inside the executor; ship configs, not models).
+    ``load_params() -> pytree`` runs on rank 0 only; its result is
+    broadcast to every replica. Leave it None when ``build_engine``
+    derives parameters itself (e.g. deterministic seeded init).
+
+    ``mode="local"`` runs the same admission/routing/ack machinery over
+    in-process engines -- no pool, no processes -- which is what the
+    fast test lane exercises; ``mode="cluster"`` is the real thing.
+
+    Pools default to a ``CommandLauncher`` (fresh spawned interpreters):
+    serving executors run jax, and running jax in *forked* children of a
+    driver that already initialized jax is unsafe.
+    """
+
+    def __init__(self, n: int, build_engine, load_params=None, *,
+                 mode: str = "cluster", pool: ExecutorPool | None = None,
+                 quantum: int | None = None, backend: str = "ring",
+                 round_timeout: float = 180.0,
+                 warmup_timeout: float = 600.0, trace: bool = False,
+                 pool_kwargs: dict | None = None):
+        if mode not in ("cluster", "local"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.mode = mode
+        self.ns = f"serve-{uuid.uuid4().hex[:10]}"
+        self.quantum = serve_quantum() if quantum is None else int(quantum)
+        self.round_timeout = round_timeout
+        self.trace = trace
+        self._pending: deque[dict] = deque()
+        self._inflight: dict[int, dict] = {}        # uid -> record
+        self._results: dict[int, Generation] = {}
+        self._to_ack: set[int] = set()
+        self._submit_t: dict[int, float] = {}
+        self._finish_t: dict[int, float] = {}
+        self._uid = 0
+        #: replica load estimate, keyed by stable slot id (cluster) or
+        #: replica index (local); refreshed from each round's returns
+        self._load: dict[int, int] = {}
+        self.replica_stats: dict[int, dict] = {}
+        self.rerouted = 0           # requests re-queued off dead replicas
+        self.rounds = 0
+        self._own_pool = False
+        self.pool = pool
+
+        if mode == "local":
+            params = _numpy_tree(load_params()) if load_params else None
+            self._engines = [build_engine(params, i) for i in range(n)]
+            self._load = {i: 0 for i in range(n)}
+            return
+
+        if self.pool is None:
+            kw = dict(backend=backend, timeout=round_timeout,
+                      launcher=CommandLauncher(),
+                      hb_interval=0.25, hb_timeout=30.0)
+            kw.update(pool_kwargs or {})
+            self.pool = ExecutorPool(n, **kw)
+            self._own_pool = True
+        self.pool.run(_warmup_closure(self.ns, build_engine, load_params),
+                      timeout=warmup_timeout)
+        self._load = {slot: 0 for slot in self.pool.world}
+
+    # ---- request surface ---------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: int = -1) -> int:
+        self._uid += 1
+        uid = self._uid
+        self._pending.append({"uid": uid,
+                              "prompt": np.asarray(prompt, np.int32),
+                              "max_new_tokens": int(max_new_tokens),
+                              "eos_id": int(eos_id)})
+        self._submit_t[uid] = time.monotonic()
+        return uid
+
+    def outstanding(self) -> int:
+        return len(self._pending) + len(self._inflight)
+
+    def results(self) -> dict[int, Generation]:
+        return dict(self._results)
+
+    def latency(self, uid: int) -> float | None:
+        """Seconds from submit to the driver observing the result."""
+        t1 = self._finish_t.get(uid)
+        return None if t1 is None else t1 - self._submit_t[uid]
+
+    # ---- rounds ------------------------------------------------------------
+    def step_round(self) -> list[int]:
+        """Assign pending requests least-loaded, run one pooled round,
+        merge results. Returns uids newly finished this round. On a
+        replica failure: shrink to survivors, re-queue the dead
+        replica's requests, and report nothing finished (survivor
+        outboxes re-deliver next round)."""
+        if self.outstanding() == 0:
+            return []
+        self.rounds += 1
+        if self.mode == "local":
+            return self._local_round()
+        world = self.pool.world
+        admits: dict[int, list] = {}
+        for slot in world:
+            self._load.setdefault(slot, 0)
+        sent: list[dict] = []
+        while self._pending:
+            rec = self._pending.popleft()
+            slot = min(world, key=lambda s: self._load[s])
+            rec["slot"] = slot
+            admits.setdefault(world.index(slot), []).append(rec)
+            self._load[slot] += 1
+            self._inflight[rec["uid"]] = rec
+            sent.append(rec)
+        acks = sorted(self._to_ack)
+        closure = _round_closure(self.ns, admits, acks, self.quantum)
+        try:
+            outs = self.pool.run(closure, timeout=self.round_timeout,
+                                 trace=True if self.trace else None)
+        except ExecutorFailure:
+            self._recover(sent)
+            return []
+        self._to_ack.clear()
+        done = []
+        for w, out in enumerate(outs):
+            slot = world[w]
+            self._load[slot] = out["load"]
+            self.replica_stats[slot] = {"stats": out["stats"],
+                                        "acceptance": out["acceptance"]}
+            for rec in out["finished"]:
+                done.extend(self._collect(rec))
+        return done
+
+    def _collect(self, rec: dict) -> list[int]:
+        uid = rec["uid"]
+        self._to_ack.add(uid)                   # prune outboxes next round
+        if uid in self._results:                # duplicate re-delivery
+            return []
+        self._results[uid] = Generation(rec["tokens"], uid,
+                                        rec["truncated"],
+                                        rec.get("accept_ratio"))
+        self._finish_t[uid] = time.monotonic()
+        self._inflight.pop(uid, None)
+        return [uid]
+
+    def _recover(self, sent: list[dict]) -> None:
+        info = self.pool.shrink_to_survivors()
+        dead = set(info["dead_slots"])
+        dead_owned = [rec for rec in self._inflight.values()
+                      if rec.get("slot") in dead]
+        # requests assigned in the failed round have unconfirmed
+        # delivery -- re-queue them too. A survivor that DID admit one
+        # before the failure will just see a duplicate submit later;
+        # the uid-keyed outbox and driver dedup make that harmless.
+        requeue = {rec["uid"]: rec for rec in dead_owned + sent
+                   if rec["uid"] in self._inflight}
+        # preserve submission order: older uids re-enter the queue first
+        for uid in sorted(requeue, reverse=True):
+            rec = requeue[uid]
+            self._inflight.pop(uid)
+            rec.pop("slot", None)
+            self._pending.appendleft(rec)
+        self.rerouted += len(dead_owned)
+        for s in dead:
+            self._load.pop(s, None)
+
+    def _local_round(self) -> list[int]:
+        replicas = sorted(self._load)
+        while self._pending:
+            rec = self._pending.popleft()
+            slot = min(replicas, key=lambda s: self._load[s])
+            rec["slot"] = slot
+            self._inflight[rec["uid"]] = rec
+            self._load[slot] += 1
+            eng = self._engines[slot]
+            eng.submit(rec["prompt"], rec["max_new_tokens"],
+                       rec["eos_id"], uid=rec["uid"])
+        done = []
+        for slot, eng in enumerate(self._engines):
+            steps = 0
+            while steps < self.quantum and eng.pending() > 0:
+                for req in eng.step():
+                    gen = eng._generation(req)
+                    done.extend(self._collect(
+                        {"uid": gen.uid, "tokens": list(gen),
+                         "truncated": gen.truncated,
+                         "accept_ratio": gen.accept_ratio}))
+                steps += 1
+            self._load[slot] = eng.pending()
+            self.replica_stats[slot] = {
+                "stats": eng.stats.summary(),
+                "acceptance": eng.acceptance.summary()}
+        self._to_ack.clear()        # no outboxes to prune in local mode
+        return done
+
+    def run_until_drained(self, max_rounds: int = 10_000):
+        """Drive rounds until every submitted request has a result;
+        returns {uid: Generation}."""
+        rounds = 0
+        while self.outstanding() > 0:
+            self.step_round()
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError(
+                    f"serving failed to drain within {max_rounds} rounds "
+                    f"({self.outstanding()} outstanding)")
+        return self.results()
+
+    # ---- aggregate telemetry ----------------------------------------------
+    def acceptance_summary(self) -> dict:
+        """Pool-wide speculative acceptance, summed over replicas."""
+        tot = {"proposed": 0, "accepted": 0, "rounds": 0}
+        for rs in self.replica_stats.values():
+            for k in tot:
+                tot[k] += rs["acceptance"][k]
+        tot["ratio"] = tot["accepted"] / max(tot["proposed"], 1)
+        return tot
+
+    # ---- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        if self._own_pool and self.pool is not None:
+            self.pool.shutdown()
+
+    def __enter__(self) -> "ClusterServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Canonical smoke-model replica spec: what tests, benchmarks and the
+# example use. Returns (build_engine, load_params) closures that import
+# models lazily -- nothing heavy is shipped, each executor rebuilds the
+# model from config and receives the broadcast parameters.
+# ---------------------------------------------------------------------------
+def smoke_engine_spec(arch: str = "qwen3-4b", *, s_max: int = 64,
+                      slots: int = 4, seed: int = 0, gamma: int = 0,
+                      draft_layers: int | None = None):
+    """``gamma > 0`` enables speculative decoding on every replica with
+    a draft of ``draft_layers`` layers (None: clone the target config --
+    a draft identical to the target accepts everything, which is the
+    determinism-pinning configuration)."""
+
+    def _cfg_model():
+        import dataclasses
+        import jax.numpy as jnp
+        from ..configs import get_config
+        from ..models.model import Model
+        from ..parallel import axes as A
+        from ..parallel.ops import ParallelConfig, make_ops
+        cfg = dataclasses.replace(get_config(arch, smoke=True),
+                                  dtype=jnp.float32)
+        axes1 = A.MeshAxes(1, 1, 1)
+        pcfg = ParallelConfig(path="mpignite", sequence_parallel=False,
+                              remat="none")
+        return cfg, Model(cfg, axes1, pcfg), make_ops(axes1, pcfg), axes1, \
+            pcfg
+
+    def load_params():
+        import jax
+        import jax.numpy as jnp
+        cfg, model, _, axes1, pcfg = _cfg_model()
+        tree = {"target": model.init(jax.random.PRNGKey(seed),
+                                     dtype=jnp.float32)}
+        if gamma > 0 and draft_layers is not None:
+            import dataclasses
+            from ..models.model import Model
+            dcfg = dataclasses.replace(cfg, n_layers=draft_layers,
+                                       name=cfg.name + "-draft")
+            draft = Model(dcfg, axes1, pcfg)
+            tree["draft"] = draft.init(jax.random.PRNGKey(seed + 1),
+                                       dtype=jnp.float32)
+        return tree
+
+    def build_engine(params, replica_id):
+        import jax
+        import jax.numpy as jnp
+        from .engine import Engine
+        from .spec import SpecDecoder
+        cfg, model, ops, axes1, pcfg = _cfg_model()
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+
+        @jax.jit
+        def prefill_fn(p, batch):
+            return model.prefill(ops, p, batch, s_max=s_max)
+
+        @jax.jit
+        def decode_fn(p, caches, tokens, pos):
+            return model.decode(ops, p, caches, tokens, pos)
+
+        spec = None
+        if gamma > 0:
+            if draft_layers is None:
+                draft_model, draft_params = model, params["target"]
+            else:
+                import dataclasses
+                from ..models.model import Model
+                dcfg = dataclasses.replace(cfg, n_layers=draft_layers,
+                                           name=cfg.name + "-draft")
+                draft_model, draft_params = Model(dcfg, axes1, pcfg), \
+                    params["draft"]
+            spec = SpecDecoder(model, ops, draft_model, draft_params,
+                               s_max=s_max, gamma=gamma)
+        return Engine(model, params["target"], prefill_fn, decode_fn,
+                      max_slots=slots, s_max=s_max, spec=spec)
+
+    return build_engine, load_params

@@ -10,7 +10,17 @@ continuous-batching trick to keep the compiled shape static.
 
 The engine is deliberately runtime-agnostic: ``prefill_fn``/``decode_fn``
 are the compiled steps from train/step.py, so the same engine drives a
-1-device CPU smoke test and a 512-chip mesh.
+1-device CPU smoke test and a 512-chip mesh. ``serve/cluster.py`` shards
+replicas of it across a warm ``ExecutorPool``; ``serve/spec.py`` plugs
+draft-model speculative decoding into ``step()``.
+
+Termination contract: a request finishes when its token hits ``eos_id``,
+its ``max_new_tokens`` budget is spent, or its position runs out of
+cache (``s_max``) -- the last case sets ``Request.truncated`` so callers
+can tell a context-capped generation from a naturally finished one.
+Finishing can happen *at prefill* (first token is EOS, or the budget is
+one): such a request never occupies a slot and is returned by the next
+``step()``/``run()``.
 """
 from __future__ import annotations
 
@@ -22,6 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.obs.metrics import AcceptanceStats
+
+#: bounded debugging window of recent per-step occupancies kept by
+#: EngineStats (the running sum/count is what long-lived replicas use)
+OCCUPANCY_TAIL = 256
+
 
 @dataclasses.dataclass
 class Request:
@@ -31,6 +47,25 @@ class Request:
     eos_id: int = -1                # -1: never stops early
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    #: finished because ``pos`` hit the cache budget (``s_max``), not
+    #: EOS and not ``max_new_tokens`` -- the caller's signal that the
+    #: generation was cut off rather than completed
+    truncated: bool = False
+
+
+class Generation(list):
+    """A finished request's tokens. Compares equal to a plain list (so
+    ``out[uid] == expected_tokens`` keeps working) and carries the
+    per-request outcome flags alongside."""
+
+    def __init__(self, tokens, uid: int, truncated: bool = False,
+                 accept_ratio: float | None = None):
+        super().__init__(tokens)
+        self.uid = uid
+        self.truncated = truncated
+        #: mean speculative-decoding acceptance ratio over this
+        #: request's spec rounds (None when spec decoding never ran)
+        self.accept_ratio = accept_ratio
 
 
 @dataclasses.dataclass
@@ -38,12 +73,60 @@ class EngineStats:
     prefills: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
-    batch_occupancy: list = dataclasses.field(default_factory=list)
+    #: requests finished by the ``s_max`` cache budget (truncated)
+    truncations: int = 0
+    #: requests finished at prefill (first token was terminal)
+    prefill_finishes: int = 0
+    #: engine steps that ran the speculative (propose+verify) path
+    spec_rounds: int = 0
+    #: running occupancy aggregate -- O(1) however long the engine
+    #: lives; ``occupancy_tail`` keeps a bounded recent window for
+    #: debugging
+    occupancy_sum: int = 0
+    occupancy_steps: int = 0
+    occupancy_tail: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=OCCUPANCY_TAIL))
+
+    def record_occupancy(self, n: int) -> None:
+        self.occupancy_sum += int(n)
+        self.occupancy_steps += 1
+        self.occupancy_tail.append(int(n))
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(self.occupancy_steps, 1)
+
+    @property
+    def batch_occupancy(self) -> list[int]:
+        """Recent per-step occupancies (bounded window -- the unbounded
+        list it replaces grew forever on serving replicas)."""
+        return list(self.occupancy_tail)
+
+    def summary(self) -> dict:
+        return {"prefills": self.prefills,
+                "decode_steps": self.decode_steps,
+                "tokens_out": self.tokens_out,
+                "truncations": self.truncations,
+                "prefill_finishes": self.prefill_finishes,
+                "spec_rounds": self.spec_rounds,
+                "mean_occupancy": self.mean_occupancy}
 
 
 class Engine:
+    """``spec`` (optional) is a ``serve.spec.SpecDecoder``: when set and
+    every active slot has cache headroom, ``step()`` proposes ``gamma``
+    draft tokens per slot and verifies them in one fused target dispatch,
+    emitting 1..gamma+1 tokens per slot per step (greedy outputs are
+    bit-identical to the non-speculative path by construction).
+
+    ``batch_axes`` optionally pins the cache batch axis (one int for
+    every leaf, or a pytree of ints congruent with the cache); when
+    omitted the engine derives each leaf's batch axis from the model's
+    ``cache_specs`` metadata -- see ``_batch_axis_tree``."""
+
     def __init__(self, model, params, prefill_fn: Callable,
-                 decode_fn: Callable, max_slots: int, s_max: int):
+                 decode_fn: Callable, max_slots: int, s_max: int,
+                 spec=None, batch_axes=None):
         self.model = model
         self.params = params
         self.prefill_fn = prefill_fn
@@ -57,104 +140,273 @@ class Engine:
         self.active = np.zeros((max_slots,), bool)
         self.caches = None                               # batched cache tree
         self.stats = EngineStats()
+        self.acceptance = AcceptanceStats()
+        self.spec = spec
+        self._batch_axes = batch_axes
+        self._axis_tree = None                  # resolved on first prefill
+        self._draft_caches = None
+        self._draft_axis_tree = None
+        #: requests finished at prefill, to be returned by the next
+        #: step()/run() -- they never occupied a slot
+        self._prefill_finished: list[Request] = []
+        #: live per-request spec accounting: uid -> [proposed, accepted]
         self._uid = 0
 
     # ---- public API --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: int = -1) -> int:
-        self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+               eos_id: int = -1, uid: int | None = None) -> int:
+        """Queue one request. ``uid`` lets a front-end (serve/cluster.py)
+        assign globally unique ids across replicas; left None, the
+        engine numbers requests itself."""
+        if uid is None:
+            self._uid += 1
+            uid = self._uid
+        else:
+            self._uid = max(self._uid, int(uid))
+        self.queue.append(Request(uid, np.asarray(prompt, np.int32),
                                   max_new_tokens, eos_id))
-        return self._uid
+        return uid
 
-    def run(self) -> dict[int, list[int]]:
-        """Drive to completion; returns {uid: generated tokens}."""
-        out = {}
-        while self.queue or any(self.active):
-            finished = self.step()
-            for r in finished:
-                out[r.uid] = r.out_tokens
+    def pending(self) -> int:
+        """Queued + in-flight + finished-but-uncollected requests --
+        the engine's load measure (what least-loaded routing compares)."""
+        return (len(self.queue) + int(self.active.sum())
+                + len(self._prefill_finished))
+
+    def run(self) -> dict[int, Generation]:
+        """Drive to completion; returns {uid: Generation} (a Generation
+        compares equal to the plain token list and carries
+        ``truncated``/``accept_ratio``)."""
+        out: dict[int, Generation] = {}
+        while self.queue or any(self.active) or self._prefill_finished:
+            for r in self.step():
+                out[r.uid] = self._generation(r)
         return out
+
+    def _generation(self, req: Request) -> Generation:
+        return Generation(req.out_tokens, req.uid, req.truncated,
+                          self.acceptance.pop_request(req.uid))
 
     # ---- engine step --------------------------------------------------------
     def step(self) -> list[Request]:
         self._admit()
-        finished: list[Request] = []
+        finished: list[Request] = list(self._prefill_finished)
+        self._prefill_finished.clear()
         if not any(self.active):
             return finished
+        if self.spec is not None and self._spec_eligible():
+            return finished + self._spec_step()
         tokens = jnp.asarray(self.cur_tok)[:, None]
         pos = jnp.asarray(self.pos)
         logits, self.caches = self.decode_fn(self.params, self.caches,
                                              tokens, pos)
+        if self._draft_caches is not None:
+            # keep the draft cache position-consistent: the draft decodes
+            # the same token at the same position the target just did, so
+            # a later spec round resumes from an aligned prefix
+            _, self._draft_caches = self.spec.draft_decode(
+                self._draft_caches, tokens, pos)
         self.stats.decode_steps += 1
-        self.stats.batch_occupancy.append(int(self.active.sum()))
+        self.stats.record_occupancy(int(self.active.sum()))
         next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for i, req in enumerate(self.slots):
             if req is None or not self.active[i]:
                 continue
-            t = int(next_tok[i])
-            req.out_tokens.append(t)
-            self.stats.tokens_out += 1
             self.pos[i] += 1
-            self.cur_tok[i] = t
-            if (t == req.eos_id or
-                    len(req.out_tokens) >= req.max_new_tokens or
-                    self.pos[i] >= self.s_max - 1):
-                req.done = True
+            if self._emit(i, req, int(next_tok[i])):
                 finished.append(req)
-                self.active[i] = False
-                self.slots[i] = None
+        return finished
+
+    def _emit(self, slot: int, req: Request, tok: int) -> bool:
+        """Append one generated token; apply the termination contract.
+        Returns True (and frees the slot) when the request finished.
+        Caller has already advanced ``pos`` past the token that
+        *produced* ``tok``."""
+        req.out_tokens.append(tok)
+        self.stats.tokens_out += 1
+        self.cur_tok[slot] = tok
+        hit_eos = tok == req.eos_id
+        hit_budget = len(req.out_tokens) >= req.max_new_tokens
+        hit_ctx = bool(self.pos[slot] >= self.s_max - 1)
+        if hit_eos or hit_budget or hit_ctx:
+            req.done = True
+            req.truncated = hit_ctx and not (hit_eos or hit_budget)
+            if req.truncated:
+                self.stats.truncations += 1
+            self.active[slot] = False
+            self.slots[slot] = None
+            return True
+        return False
+
+    # ---- speculative decoding ----------------------------------------------
+    def _spec_eligible(self) -> bool:
+        """Every active slot must have cache headroom for gamma+1 writes
+        (positions pos..pos+gamma all < s_max); otherwise this step falls
+        back to the one-token path so near-budget requests still finish
+        correctly."""
+        gamma = self.spec.gamma
+        act = self.active
+        return bool(np.all(self.pos[act] + gamma < self.s_max))
+
+    def _spec_step(self) -> list[Request]:
+        """One speculative round: the draft proposes gamma tokens per
+        slot, the target verifies them in one fused dispatch, and each
+        slot emits its accepted prefix plus the target's correction
+        token -- greedy acceptance, so the emitted stream is bit-equal
+        to plain decoding."""
+        sp = self.spec
+        gamma = sp.gamma
+        # inactive rows still flow through the batched scans; pin their
+        # inputs to position 0 so the dead rows' writes never clamp
+        pos_in = np.where(self.active, self.pos, 0).astype(np.int32)
+        tok_in = np.where(self.active, self.cur_tok, 0).astype(np.int32)
+        draft_toks, self._draft_caches = sp.propose(
+            self._draft_caches, jnp.asarray(tok_in), jnp.asarray(pos_in))
+        verified, self.caches = sp.verify(
+            self.params, self.caches, jnp.asarray(tok_in), draft_toks,
+            jnp.asarray(pos_in))
+        self.stats.decode_steps += 1
+        self.stats.spec_rounds += 1
+        self.stats.record_occupancy(int(self.active.sum()))
+        d = np.asarray(draft_toks)              # (B, gamma)
+        v = np.asarray(verified)                # (B, gamma+1)
+        finished: list[Request] = []
+        for i, req in enumerate(self.slots):
+            if req is None or not self.active[i]:
+                continue
+            # longest prefix where the draft guessed the target's token
+            agree = d[i] == v[i, :gamma]
+            n_acc = int(np.cumprod(agree).sum())
+            self.acceptance.record(req.uid, gamma, n_acc)
+            for tok in v[i, :n_acc + 1]:
+                self.pos[i] += 1
+                if self._emit(i, req, int(tok)):
+                    finished.append(req)
+                    break
         return finished
 
     # ---- admission + prefill -------------------------------------------------
     def _admit(self):
         for i in range(self.max_slots):
-            if self.slots[i] is None and self.queue:
+            # a request that finishes at prefill never takes the slot --
+            # keep admitting into it until something survives prefill
+            while self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
                 self._prefill_into(i, req)
 
     def _prefill_into(self, slot: int, req: Request):
-        """Prefill one request and splice its cache into the batch cache."""
+        """Prefill one request and splice its cache into the batch cache.
+        If the prefill token itself is terminal (EOS, a budget of one,
+        or a prompt already at the cache limit), the request finishes
+        here: it never occupies the slot, never costs a decode step, and
+        is returned by the next ``step()``."""
         batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
         logits, cache1 = self.prefill_fn(self.params, batch)
         self.stats.prefills += 1
         first = int(np.argmax(np.asarray(logits)[0]))
-        if self.caches is None:
-            self.caches = jax.tree_util.tree_map_with_path(
-                lambda path, c: self._widen(c, path), cache1)
-        self.caches = jax.tree_util.tree_map_with_path(
-            lambda path, full, one: self._splice(full, one, slot, path),
-            self.caches, cache1)
         req.out_tokens.append(first)
         self.stats.tokens_out += 1
+        pos = len(req.prompt)
+        hit_eos = first == req.eos_id
+        hit_budget = req.max_new_tokens <= 1
+        hit_ctx = pos >= self.s_max - 1
+        if hit_eos or hit_budget or hit_ctx:
+            req.done = True
+            req.truncated = hit_ctx and not (hit_eos or hit_budget)
+            if req.truncated:
+                self.stats.truncations += 1
+            self.stats.prefill_finishes += 1
+            self._prefill_finished.append(req)
+            return
+        if self._axis_tree is None:
+            self._axis_tree = self._batch_axis_tree(cache1, self.model)
+        if self.caches is None:
+            self.caches = jax.tree_util.tree_map(
+                self._widen, cache1, self._axis_tree)
+        self.caches = jax.tree_util.tree_map(
+            lambda full, one, ax: self._splice(full, one, slot, ax),
+            self.caches, cache1, self._axis_tree)
+        if self.spec is not None:
+            self._prefill_draft(slot, req)
         self.slots[slot] = req
         self.active[slot] = True
-        self.pos[slot] = len(req.prompt)
+        self.pos[slot] = pos
         self.cur_tok[slot] = first
 
-    def _widen(self, c, path=()):
-        """(1, ...)-batched single cache -> zeros of full slot width.
-        Cache layouts carry batch at a known axis: we rely on the model's
-        cache trees using batch as the axis right after any layer-stack
-        dims; detection: the dim equal to 1."""
-        axis = self._batch_axis(c, path)
+    def _prefill_draft(self, slot: int, req: Request):
+        """Mirror the prefill into the draft model's slot cache."""
+        dcache1 = self.spec.draft_prefill(req.prompt)
+        if self._draft_axis_tree is None:
+            self._draft_axis_tree = self._batch_axis_tree(
+                dcache1, self.spec.draft_model)
+        if self._draft_caches is None:
+            self._draft_caches = jax.tree_util.tree_map(
+                self._widen, dcache1, self._draft_axis_tree)
+        self._draft_caches = jax.tree_util.tree_map(
+            lambda full, one, ax: self._splice(full, one, slot, ax),
+            self._draft_caches, dcache1, self._draft_axis_tree)
+
+    # ---- cache layout -------------------------------------------------------
+    def _batch_axis_tree(self, cache1, model):
+        """Per-leaf batch axis of the cache tree.
+
+        The prefill cache carries batch size 1, but a size-1 dim is NOT
+        proof of batch-ness: a single-KV-head layout has a legitimate
+        size-1 head axis *before* batch, and widening/splicing that axis
+        silently corrupts other slots' caches. So the axis is derived
+        from ground truth where available: the model's ``cache_specs``
+        metadata evaluated at two batch sizes -- the axis whose extent
+        follows the batch argument IS the batch axis, whatever size-1
+        dims surround it. An explicit ``batch_axes`` constructor arg
+        wins; the first-size-1 heuristic survives only as the fallback
+        for models without cache metadata."""
+        if self._batch_axes is not None:
+            if isinstance(self._batch_axes, int):
+                return jax.tree_util.tree_map(
+                    lambda _: self._batch_axes, cache1)
+            return self._batch_axes
+        specs = getattr(model, "cache_specs", None)
+        if specs is not None:
+            try:
+                s1, s3 = specs(1, self.s_max), specs(3, self.s_max)
+                tree = jax.tree_util.tree_map(
+                    lambda a, b, c: _axis_from_specs(a, b, c), s1, s3,
+                    cache1)
+                return tree
+            except Exception:       # noqa: BLE001 -- metadata shape drift
+                pass                # falls through to the heuristic
+        return jax.tree_util.tree_map_with_path(_first_one_axis, cache1)
+
+    def _widen(self, c, axis: int):
+        """(1, ...)-batched single cache -> zeros of full slot width."""
         shape = list(c.shape)
         shape[axis] = self.max_slots
         return jnp.zeros(shape, c.dtype)
 
-    def _splice(self, full, one, slot, path=()):
-        axis = self._batch_axis(one, path)
+    def _splice(self, full, one, slot: int, axis: int):
         idx = [slice(None)] * one.ndim
         idx[axis] = slice(slot, slot + 1)
         return full.at[tuple(idx)].set(one)
 
-    @staticmethod
-    def _batch_axis(c, path=()) -> int:
-        for i, s in enumerate(c.shape):
-            if s == 1:
-                return i
-        leaf = jax.tree_util.keystr(path) if path else "<leaf>"
-        raise ValueError(
-            f"cannot locate batch axis in cache leaf {leaf}: no size-1 "
-            f"dimension in shape {c.shape} (prefill caches must keep the "
-            "single-request batch dim)")
+
+def _axis_from_specs(spec1, spec3, leaf) -> int:
+    """Batch axis = the dim whose extent tracked the batch argument
+    across two ``cache_specs`` evaluations (1 vs 3)."""
+    for i, (a, b) in enumerate(zip(spec1.shape, spec3.shape)):
+        if a != b:
+            return i
+    return _first_one_axis((), leaf)
+
+
+def _first_one_axis(path, c) -> int:
+    """Fallback heuristic for metadata-less models: the first size-1
+    dim. Ambiguous layouts (several size-1 dims) should pass
+    ``batch_axes`` explicitly."""
+    for i, s in enumerate(c.shape):
+        if s == 1:
+            return i
+    leaf = jax.tree_util.keystr(path) if path else "<leaf>"
+    raise ValueError(
+        f"cannot locate batch axis in cache leaf {leaf}: no size-1 "
+        f"dimension in shape {c.shape} (prefill caches must keep the "
+        "single-request batch dim)")

@@ -1,0 +1,131 @@
+"""Draft-model speculative decoding for the slot engine.
+
+Classic two-model speculation (exemplar: SNIPPETS.md Snippet 2) adapted
+to the engine's static-shape batch: every spec round, a small *draft*
+model proposes ``gamma`` greedy tokens per slot from its own mirrored
+slot cache, then the *target* verifies the whole proposal in ONE fused
+dispatch -- a ``lax.scan`` of gamma+1 decode steps inside a single jit
+call, so the per-step Python/dispatch overhead that dominates small-batch
+decoding is paid once per round instead of once per token. The engine
+accepts the longest prefix where the draft matched the target's greedy
+choice and emits it plus the target's correction token, so the output
+stream is bit-identical to plain greedy decoding -- speculation changes
+cost, never content.
+
+Cache-rollback safety comes for free from the attention layout:
+``attn_decode`` masks cache entries at positions ``>= kv_len`` (the
+per-slot ``pos``), so rejecting draft tokens is just *not advancing*
+``pos`` -- the speculatively written KV entries beyond it are invisible
+and get overwritten by the next round. This is a property of
+position-indexed (attention) caches only: recurrent state (mamba/xLSTM
+segments) cannot be rolled back by masking, so speculative decoding
+requires an attention-only ``kind`` for both models.
+
+The draft runs one extra scan step per round (gamma+1 total) so that on
+a full acceptance its cache already holds KV for the last proposed
+token -- otherwise the next round would resume over a cache hole.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def default_gamma() -> int:
+    """Draft length; ``MPIGNITE_SPEC_GAMMA`` overrides the default 4."""
+    try:
+        return max(1, int(os.environ.get("MPIGNITE_SPEC_GAMMA", "4")))
+    except ValueError:
+        return 4
+
+
+class SpecDecoder:
+    """Bundles the draft model (params + its own jitted steps) and the
+    fused propose/verify dispatches. Plug into ``Engine(spec=...)``.
+
+    ``target_model``/``target_ops`` are the verified model (the engine's
+    own); the verify scan closes over them so one jit call advances the
+    target cache through gamma+1 positions. ``s_max`` must equal the
+    engine's: draft and target caches are position-aligned.
+    """
+
+    def __init__(self, target_model, target_ops, draft_model, draft_params,
+                 draft_ops=None, *, s_max: int, gamma: int | None = None):
+        self.gamma = default_gamma() if gamma is None else int(gamma)
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self.s_max = s_max
+        draft_ops = draft_ops if draft_ops is not None else target_ops
+        gamma_ = self.gamma
+
+        @jax.jit
+        def _draft_prefill(params, batch):
+            return draft_model.prefill(draft_ops, params, batch,
+                                       s_max=s_max)
+
+        @jax.jit
+        def _draft_decode(params, caches, tokens, pos):
+            return draft_model.decode(draft_ops, params, caches, tokens,
+                                      pos)
+
+        @jax.jit
+        def _propose(params, caches, tok, pos):
+            # gamma+1 greedy draft steps fused in one dispatch; the last
+            # step only exists to land the final proposal's KV in the
+            # draft cache for the full-accept case.
+            def body(carry, _):
+                cur, p, caches = carry
+                logits, caches = draft_model.decode(
+                    draft_ops, params, caches, cur[:, None], p)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (nxt, p + 1, caches), nxt
+
+            (_, _, caches), toks = jax.lax.scan(
+                body, (tok, pos, caches), None, length=gamma_ + 1)
+            return toks[:gamma_].T, caches          # (B, gamma)
+
+        @jax.jit
+        def _verify(params, caches, tok, draft_toks, pos):
+            # feed [current, d_1..d_gamma] through the target in one
+            # fused scan; out[:, j] is the target's greedy choice after
+            # seeing the prefix up to proposal j.
+            seq = jnp.concatenate([tok[:, None], draft_toks], axis=1)
+
+            def body(carry, x):
+                caches, p = carry
+                logits, caches = target_model.decode(
+                    target_ops, params, caches, x[:, None], p)
+                return (caches, p + 1), jnp.argmax(
+                    logits, axis=-1).astype(jnp.int32)
+
+            (caches, _), outs = jax.lax.scan(body, (caches, pos), seq.T)
+            return outs.T, caches                   # (B, gamma+1)
+
+        self._draft_prefill_fn = _draft_prefill
+        self._draft_decode_fn = _draft_decode
+        self._propose_fn = _propose
+        self._verify_fn = _verify
+
+    # ---- engine-facing surface ---------------------------------------------
+    def draft_prefill(self, prompt: np.ndarray):
+        """Prefill the draft on one prompt; returns its (1, ...) cache
+        (the draft's logits are never used -- the target picks every
+        emitted token)."""
+        batch = {"tokens": jnp.asarray(prompt, jnp.int32)[None, :]}
+        _, cache1 = self._draft_prefill_fn(self.draft_params, batch)
+        return cache1
+
+    def draft_decode(self, caches, tokens, pos):
+        """One plain draft step -- used by the engine's non-speculative
+        fallback path to keep the draft cache position-aligned."""
+        return self._draft_decode_fn(self.draft_params, caches, tokens,
+                                     pos)
+
+    def propose(self, caches, tok, pos):
+        return self._propose_fn(self.draft_params, caches, tok, pos)
+
+    def verify(self, params, caches, tok, draft_toks, pos):
+        return self._verify_fn(params, caches, tok, draft_toks, pos)

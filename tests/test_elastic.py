@@ -142,6 +142,31 @@ def test_join_during_inflight_segmented_iallreduce_parks(tmp_path):
 
 @pytest.mark.chaos
 @pytest.mark.timeout(120)
+def test_post_shrink_dispatch_skips_dead_rank_straggler_wait():
+    """A rank SIGKILLed mid-job can never deliver its result. The next
+    dispatch after shrink must not sit in the straggler drain until the
+    *failed* job's deadline waiting for it -- with a long job timeout
+    that used to stall the whole pool for minutes after recovery."""
+    with ExecutorPool(3, backend="ring", timeout=30, hb_interval=0.05,
+                      hb_timeout=0.8) as pool:
+        victim = pool.pids[2]
+        killer = threading.Timer(0.4, os.kill, (victim, signal.SIGKILL))
+        killer.start()
+        with pytest.raises(ExecutorFailure):
+            # no collectives: the survivors finish on their own and
+            # report results; only the dead rank's slot stays unfilled
+            pool.run(lambda c: time.sleep(1.5) or c.get_rank(),
+                     timeout=90)
+        killer.join()
+        pool.shrink_to_survivors()
+        time.sleep(1.5)             # let survivor stragglers deliver
+        t0 = time.monotonic()
+        assert pool.run(lambda c: c.get_rank(), timeout=30) == [0, 1]
+        assert time.monotonic() - t0 < 10   # not the failed job's 90s
+
+
+@pytest.mark.chaos
+@pytest.mark.timeout(120)
 def test_supervisor_elastic_shrink_no_relaunch(tmp_path):
     """SIGKILL between steps with ``elastic=True``: the supervisor
     shrinks to the survivors (same PIDs -- no relaunch), restores the
